@@ -1,0 +1,49 @@
+"""Shared benchmark utilities: cached campaign dataset + trained selector."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import load_or_build, train_selector
+from repro.core.selector import ReorderSelector
+
+ART = os.environ.get("REPRO_ARTIFACTS", "artifacts")
+CAMPAIGN = dict(count=960, seed=0, size_scale=1.0, repeats=2)
+
+
+def campaign_dataset():
+    return load_or_build(cache_dir=ART, **CAMPAIGN, verbose=True)
+
+
+def trained_selector(model_name="random_forest", scaling="standard"):
+    """Final selector (RF + standardization, grid-searched); cached."""
+    sel_path = os.path.join(ART, f"selector_{model_name}_{scaling}.pkl")
+    rep_path = sel_path.replace(".pkl", "_report.json")
+    ds = campaign_dataset()
+    if os.path.exists(sel_path) and os.path.exists(rep_path):
+        with open(rep_path) as f:
+            rep = json.load(f)
+        return ReorderSelector.load(sel_path), rep, ds
+    sel, rep = train_selector(ds, model_name, scaling)
+    sel.save(sel_path)
+    slim = {k: (v.tolist() if isinstance(v, np.ndarray) else v)
+            for k, v in rep.items()}
+    with open(rep_path, "w") as f:
+        json.dump(slim, f, indent=2)
+    return sel, slim, ds
+
+
+def timed(fn, *args, repeats=1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

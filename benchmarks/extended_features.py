@@ -1,0 +1,72 @@
+"""Beyond-paper experiment (paper-side hillclimb, EXPERIMENTS.md §Perf):
+retrain the selector with the extended 19-feature set.
+
+The suite is deterministic, so the extended features are recomputed from the
+regenerated matrices and merged with the *cached* solve times — no re-solving.
+Also reports "effective accuracy": predictions whose ordering is within 5 %
+of the per-matrix optimum (near-ties carry no real cost; exact-argmin
+accuracy under-credits them)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core.features import EXTENDED_FEATURE_NAMES, extract_features_extended
+from repro.core.selector import train_selector
+from repro.sparse.dataset import generate_suite
+
+from .common import ART, CAMPAIGN, campaign_dataset, csv_line
+
+CACHE = os.path.join(ART, "extended_features.npz")
+
+
+def extended_dataset():
+    ds = campaign_dataset()
+    if os.path.exists(CACHE):
+        feats = np.load(CACHE)["features"]
+    else:
+        mats = generate_suite(count=CAMPAIGN["count"], seed=CAMPAIGN["seed"],
+                              size_scale=CAMPAIGN["size_scale"])
+        feats = np.stack([extract_features_extended(m) for m in mats])
+        np.savez_compressed(CACHE, features=feats)
+    assert feats.shape[0] == ds.features.shape[0]
+    return dataclasses.replace(ds, features=feats)
+
+
+def effective_accuracy(ds, test_idx, pred, tol=0.05):
+    t = ds.times[test_idx]
+    chosen = t[np.arange(len(test_idx)), pred]
+    best = t.min(axis=1)
+    return float((chosen <= best * (1 + tol)).mean())
+
+
+def main() -> str:
+    base = campaign_dataset()
+    ext = extended_dataset()
+    lines = [f"featureset,n_features,test_accuracy,effective_accuracy@5%,"
+             f"reduction_vs_amd,mean_speedup"]
+    out = {}
+    for name, ds in [("paper_12", base), ("extended_19", ext)]:
+        sel, rep = train_selector(ds, "random_forest", "standard")
+        ite = np.asarray(rep["test_idx"])
+        pred = np.asarray(rep["predictions"])
+        eff = effective_accuracy(ds, ite, pred)
+        lines.append(f"{name},{ds.features.shape[1]},"
+                     f"{rep['test_accuracy']:.4f},{eff:.4f},"
+                     f"{rep['reduction_vs_amd']:.4f},"
+                     f"{rep['mean_speedup_vs_amd']:.3f}")
+        out[name] = dict(acc=rep["test_accuracy"], eff=eff,
+                         red=rep["reduction_vs_amd"])
+    with open(os.path.join(ART, "extended_features_result.json"), "w") as f:
+        json.dump(out, f, indent=2)
+    d = out["extended_19"]["acc"] - out["paper_12"]["acc"]
+    lines.append(csv_line("extended_features", 0.0,
+                          f"accuracy_delta={d:+.4f}"))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,55 @@
+"""Paper Fig. 4 + Table 4: prediction accuracy of the 7 model families under
+Max-Min scaling vs Standardization, grid-searched; prints the selected RF
+hyperparameters (Table 4)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import train_selector
+from repro.core.ml import MODEL_ZOO
+
+from .common import ART, campaign_dataset, csv_line
+
+CACHE = os.path.join(ART, "fig4_results.json")
+
+
+def main(fast: bool = False) -> str:
+    ds = campaign_dataset()
+    if os.path.exists(CACHE):
+        with open(CACHE) as f:
+            results = json.load(f)
+    else:
+        results = {}
+        for model_name in sorted(MODEL_ZOO):
+            for scaling in ("minmax", "standard"):
+                t0 = time.perf_counter()
+                _, rep = train_selector(ds, model_name, scaling, fast=fast)
+                results[f"{model_name}|{scaling}"] = dict(
+                    accuracy=rep["test_accuracy"],
+                    cv_score=rep["cv_score"],
+                    best_params={k: str(v) for k, v in
+                                 rep["best_params"].items()},
+                    fit_seconds=time.perf_counter() - t0)
+        with open(CACHE, "w") as f:
+            json.dump(results, f, indent=2)
+    lines = ["model,scaling,test_accuracy,cv_score,fit_seconds"]
+    best = ("", 0.0)
+    for key, r in sorted(results.items()):
+        m, s = key.split("|")
+        lines.append(f"{m},{s},{r['accuracy']:.4f},{r['cv_score']:.4f},"
+                     f"{r['fit_seconds']:.1f}")
+        if r["accuracy"] > best[1]:
+            best = (key, r["accuracy"])
+    lines.append(csv_line("fig4_best", 0.0,
+                          f"best={best[0]};accuracy={best[1]:.4f}"))
+    rf = results.get("random_forest|standard")
+    if rf:
+        lines.append("# table4 (RF hyperparameters, grid-searched): "
+                     + json.dumps(rf["best_params"]))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(main())

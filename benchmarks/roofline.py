@@ -1,0 +1,93 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh): the three terms in seconds
+    compute    = per-device dot FLOPs / 197 TFLOP/s
+    memory     = per-device HBM bytes / 819 GB/s
+    collective = per-device wire bytes / 50 GB/s/link
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, and
+per-device residency (the fits-in-HBM proof)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.environ.get("REPRO_ARTIFACTS", "artifacts")
+
+
+def load_records(mesh="pod16x16", tag=None):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(ART, "dryrun", mesh, "*.json"))):
+        name = os.path.basename(p)[:-5]
+        parts = name.split("__")
+        if tag is None and len(parts) > 2:
+            continue
+        if tag is not None and (len(parts) < 3 or parts[2] != tag):
+            continue
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def terms_of(r):
+    """Recompute roofline terms from per-device artifact fields (so metric
+    definitions can evolve without re-running the 80-cell sweep)."""
+    pd = r["per_device"]
+    compute = pd["dot_flops"] / PEAK_FLOPS
+    memory = pd.get("dot_bytes", pd.get("bytes", 0.0)) / HBM_BW
+    collective = pd["collective_bytes"] / ICI_BW
+    terms = dict(compute_s=compute, memory_s=memory, collective_s=collective)
+    bottleneck = max(terms, key=terms.get)
+    return terms, bottleneck
+
+
+def fmt_row(r):
+    if r.get("status") != "ok":
+        status = r.get("status", "?")
+        short = "SKIP (full attention)" if "skipped" in status else status[:40]
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | "
+                f"{short} |")
+    t, dom = terms_of(r)
+    ratio = r["roofline"]["useful_flops_ratio"]
+    res = r["resident_bytes"] / 1e9
+    return (f"| {r['arch']} | {r['shape']} | {t['compute_s']*1e3:.2f} | "
+            f"{t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} | "
+            f"**{dom.replace('_s', '')}** | {ratio:.3f} | {res:.1f} | ok |")
+
+
+def main(mesh: str = "pod16x16") -> str:
+    recs = load_records(mesh)
+    lines = [
+        f"### Roofline — mesh {mesh} (ms per step; per-device terms)",
+        "",
+        "| arch | shape | compute ms | memory ms | collective ms | "
+        "bottleneck | MODEL/HLO flops | GB/dev | status |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        lines.append(fmt_row(r))
+    # aggregate: worst usefulness, most collective-bound
+    ok = [r for r in recs if r.get("status") == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline"]["useful_flops_ratio"])
+        coll = max(ok, key=lambda r: (terms_of(r)[0]["collective_s"]
+                                      / max(max(terms_of(r)[0]["compute_s"],
+                                                terms_of(r)[0]["memory_s"]),
+                                            1e-12)))
+        lines.append("")
+        lines.append(f"worst useful-FLOPs ratio: {worst['arch']}×"
+                     f"{worst['shape']} "
+                     f"({worst['roofline']['useful_flops_ratio']:.3f}); "
+                     f"most collective-bound: {coll['arch']}×{coll['shape']}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(main())
+    print()
+    print(main("pod2x16x16"))

@@ -1,0 +1,44 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: reproduces every paper table/figure from the cached
+labeling campaign, then emits the roofline table from dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import time
+
+
+def _section(title: str) -> None:
+    print(f"\n## {title}")
+
+
+def main() -> None:
+    from . import (extended_features, fig4_model_accuracy, roofline,
+                   table1_solve_times, table5_predictions, table6_statistics,
+                   table7_largest)
+
+    benches = [
+        ("table1_solve_times", table1_solve_times.main),
+        ("fig4_model_accuracy", fig4_model_accuracy.main),
+        ("table5_predictions", table5_predictions.main),
+        ("table6_statistics", table6_statistics.main),
+        ("table7_largest", table7_largest.main),
+        ("extended_features", extended_features.main),
+    ]
+    for name, fn in benches:
+        _section(name)
+        t0 = time.perf_counter()
+        out = fn()
+        dt = (time.perf_counter() - t0) * 1e6
+        print(out)
+        print(f"{name},{dt:.0f},ok")
+
+    _section("roofline (single-pod)")
+    print(roofline.main("pod16x16"))
+    _section("roofline (multi-pod)")
+    print(roofline.main("pod2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Table 5: per-matrix predicted label, prediction latency, true label
+for the Table-1 (largest) matrices."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import campaign_dataset, csv_line, trained_selector
+
+
+def main(top: int = 9) -> str:
+    sel, rep, ds = trained_selector()
+    order = np.argsort(-ds.nnzs)[:top]
+    lines = ["matrix,predict_label,predict_time_s,true_label"]
+    times = []
+    correct = 0
+    for i in order:
+        feats = ds.features[i]
+        import time
+        t0 = time.perf_counter()
+        pred = int(sel.predict_features(feats)[0])
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        true = int(ds.labels[i])
+        correct += int(pred == true)
+        lines.append(f"{ds.names[i]},{ds.algorithms[pred]},{dt:.4f},"
+                     f"{ds.algorithms[true]}")
+    lines.append(csv_line("table5_predict", np.mean(times) * 1e6,
+                          f"accuracy_on_largest={correct}/{top}"))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,32 @@
+"""Paper Table 7: the ten largest-dimension test-set matrices — AMD time vs
+predicted-ordering time and the speedup ratio."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import csv_line, trained_selector
+
+
+def main(top: int = 10) -> str:
+    sel, rep, ds = trained_selector()
+    ite = np.asarray(rep["test_idx"])
+    pred = np.asarray(rep["predictions"])
+    amd = ds.algorithms.index("amd")
+    order = ite[np.argsort(-ds.dims[ite])][:top]
+    pred_of = {int(i): int(p) for i, p in zip(ite, pred)}
+    lines = ["matrix,amd_s,model_prediction_s,speedup_ratio"]
+    speedups = []
+    for i in order:
+        t_amd = ds.times[i, amd]
+        t_pred = ds.times[i, pred_of[int(i)]]
+        s = t_amd / max(t_pred, 1e-12)
+        speedups.append(s)
+        lines.append(f"{ds.names[i]},{t_amd:.4f},{t_pred:.4f},{s:.2f}")
+    lines.append(csv_line(
+        "table7_largest", 0.0,
+        f"mean_speedup={np.mean(speedups):.2f};max={np.max(speedups):.2f}"))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,33 @@
+"""Beyond-paper demo: the paper's selection idea applied to execution plans.
+
+Loads the dry-run artifact table (roofline terms per arch × shape × mesh ×
+plan), trains the plan selector on it, and recommends plans for every
+assigned architecture.
+
+    PYTHONPATH=src python examples/autotune_demo.py
+"""
+from repro.autotune import CANDIDATE_PLANS, PlanSelector
+from repro.autotune.plan_selector import load_artifacts
+from repro.configs import ARCH_NAMES, get_config
+from repro.models.config import SHAPES
+
+
+def main():
+    arts = load_artifacts("artifacts/dryrun")
+    print(f"loaded {len(arts)} dry-run artifacts")
+    sel = PlanSelector(min_samples=8).fit(artifacts=arts)
+    mode = "learned" if sel.model is not None else "analytic fallback"
+    print(f"plan selector mode: {mode}")
+    print(f"{'arch':24s} {'shape':12s} plan")
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for shape_name in ("train_4k", "decode_32k"):
+            shape = SHAPES[shape_name]
+            name, plan = sel.recommend(cfg, shape, 16, 16)
+            print(f"{arch:24s} {shape_name:12s} {name} "
+                  f"(fsdp={plan.fsdp_params}, moe={plan.moe_impl}, "
+                  f"remat={plan.remat})")
+
+
+if __name__ == "__main__":
+    main()

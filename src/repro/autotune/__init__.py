@@ -1,0 +1,15 @@
+"""Learned execution-plan selection — the paper's technique generalized.
+
+The paper: features(sparse matrix) → best reordering algorithm.
+Here:      features(arch × shape × mesh) → best ExecutionPlan.
+
+Same supervised machinery (`repro.core.ml`), different domain: the training
+corpus is the dry-run artifact table (roofline terms + memory per plan),
+labels are the plan with the best dominant-term/residency trade-off per
+cell. See `plan_selector.PlanSelector`.
+"""
+from .plan_selector import (CANDIDATE_PLANS, PlanSelector, plan_label,
+                            workload_features)
+
+__all__ = ["CANDIDATE_PLANS", "PlanSelector", "plan_label",
+           "workload_features"]

@@ -1,0 +1,21 @@
+"""moonshot-v1-16b-a3b — kimi/moonlight MoE, 64 experts top-6
+[hf:moonshotai/Moonlight-16B-A3B]."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="moonshot-v1-16b-a3b", family="moe",
+        num_layers=48, d_model=2048, num_heads=16, num_kv_heads=16,
+        d_ff=1408, vocab_size=163840,
+        num_experts=64, experts_per_token=6, moe_period=1,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="moonshot-smoke", family="moe",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=96, vocab_size=512,
+        num_experts=8, experts_per_token=2, moe_period=1,
+    )

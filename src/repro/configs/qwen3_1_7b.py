@@ -1,0 +1,20 @@
+"""qwen3-1.7b — qk_norm + GQA, tied embeddings [hf:Qwen/Qwen3-1.7B family]."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-1.7b", family="dense",
+        num_layers=28, d_model=2048, num_heads=16, num_kv_heads=8,
+        head_dim=128, d_ff=6144, vocab_size=151936,
+        qk_norm=True, rope_theta=1e6, tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=512,
+        qk_norm=True, tie_embeddings=True,
+    )

@@ -1,0 +1,138 @@
+"""The paper's 12 matrix features (Table 3).
+
+| feature    | description                      |
+|------------|----------------------------------|
+| dimension  | number of rows (square matrix)   |
+| nnz        | number of nonzeros               |
+| nnz_ratio  | nnz / n²                         |
+| nnz_max    | max nonzeros per row             |
+| nnz_min    | min nonzeros per row             |
+| nnz_avg    | mean nonzeros per row            |
+| nnz_std    | std of nonzeros per row          |
+| degree_max | max node degree (symmetrized graph, no diagonal) |
+| degree_min | min node degree                  |
+| degree_avg | mean node degree                 |
+| bandwidth  | max |i−j| over nonzeros (Eq. 2)  |
+| profile    | Σᵢ (i − min{j : aᵢⱼ≠0}) (Eq. 3)  |
+
+`extract_features` is the host (numpy) path used by the selector pipeline;
+`extract_features_jnp` is a device path over a dense/padded representation
+used by tests to cross-validate and by the serving example to batch feature
+extraction on accelerator.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sparse.csr import CSRMatrix, bandwidth, profile
+from repro.sparse.graph import adjacency, degrees
+
+__all__ = ["FEATURE_NAMES", "EXTENDED_FEATURE_NAMES", "extract_features",
+           "extract_features_batch", "extract_features_extended",
+           "extract_features_jnp"]
+
+FEATURE_NAMES = [
+    "dimension", "nnz", "nnz_ratio", "nnz_max", "nnz_min", "nnz_avg",
+    "nnz_std", "degree_max", "degree_min", "degree_avg", "bandwidth",
+    "profile",
+]
+
+# Beyond-paper feature set (EXPERIMENTS.md §Perf, paper-side hillclimb):
+# normalized/shape-aware derivatives that separate "banded" from "scale-free"
+# structure far better than the raw Table-3 features.
+EXTENDED_FEATURE_NAMES = FEATURE_NAMES + [
+    "bandwidth_ratio",     # bandwidth / n
+    "profile_ratio",       # profile / (n · bandwidth)
+    "degree_std",          # spread of the degree distribution
+    "degree_skew",         # hub indicator (scale-free vs mesh)
+    "mean_absdist",        # mean |i−j| over nonzeros (band localization)
+    "diag_dominance",      # fraction of nonzeros on ±1% band
+    "row_nnz_cv",          # coefficient of variation of row counts
+]
+
+
+def extract_features(a: CSRMatrix) -> np.ndarray:
+    n = a.n
+    row_nnz = a.row_lengths().astype(np.float64)
+    adj = adjacency(a)
+    deg = degrees(adj).astype(np.float64)
+    nnz = float(a.nnz)
+    feats = np.array([
+        float(n),
+        nnz,
+        nnz / float(n) ** 2,
+        float(row_nnz.max()) if n else 0.0,
+        float(row_nnz.min()) if n else 0.0,
+        float(row_nnz.mean()) if n else 0.0,
+        float(row_nnz.std()) if n else 0.0,
+        float(deg.max()) if n else 0.0,
+        float(deg.min()) if n else 0.0,
+        float(deg.mean()) if n else 0.0,
+        float(bandwidth(a)),
+        float(profile(a)),
+    ], dtype=np.float64)
+    return feats
+
+
+def extract_features_batch(mats) -> np.ndarray:
+    return np.stack([extract_features(m) for m in mats])
+
+
+def extract_features_extended(a: CSRMatrix) -> np.ndarray:
+    """Paper features + 7 beyond-paper structure descriptors."""
+    base = extract_features(a)
+    n = max(a.n, 1)
+    bw = max(base[FEATURE_NAMES.index("bandwidth")], 1.0)
+    prof = base[FEATURE_NAMES.index("profile")]
+    row_nnz = a.row_lengths().astype(np.float64)
+    adj = adjacency(a)
+    deg = degrees(adj).astype(np.float64)
+    dstd = float(deg.std())
+    dmean = max(float(deg.mean()), 1e-12)
+    skew = (float(((deg - deg.mean()) ** 3).mean()) / max(dstd, 1e-12) ** 3
+            if dstd > 0 else 0.0)
+    rows = np.repeat(np.arange(a.n, dtype=np.int64), a.row_lengths())
+    absdist = np.abs(rows - a.indices.astype(np.int64))
+    near = float((absdist <= max(1, n // 100)).mean()) if a.nnz else 1.0
+    ext = np.array([
+        bw / n,
+        prof / (n * bw),
+        dstd,
+        skew,
+        float(absdist.mean()) if a.nnz else 0.0,
+        near,
+        float(row_nnz.std() / max(row_nnz.mean(), 1e-12)),
+    ], dtype=np.float64)
+    return np.concatenate([base, ext])
+
+
+def extract_features_jnp(dense):
+    """Device-side feature extraction from a dense (n, n) array.
+
+    Used for cross-validation of the host path and for batched on-device
+    extraction in the serving example (vmap over a padded batch).
+    """
+    import jax.numpy as jnp
+
+    a = jnp.asarray(dense)
+    n = a.shape[0]
+    mask = (a != 0)
+    row_nnz = mask.sum(axis=1).astype(jnp.float32)
+    nnz = row_nnz.sum()
+    # symmetrized off-diagonal degrees
+    sym = mask | mask.T
+    sym = sym & ~jnp.eye(n, dtype=bool)
+    deg = sym.sum(axis=1).astype(jnp.float32)
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    dist = jnp.where(mask, jnp.abs(i - j), 0)
+    bw = dist.max()
+    # profile: i - min column with nonzero, counted only when it is < i
+    first = jnp.where(mask, j, n).min(axis=1)
+    prof = jnp.where(first < i[:, 0], i[:, 0] - first, 0).sum()
+    return jnp.stack([
+        jnp.float32(n), nnz, nnz / jnp.float32(n) ** 2,
+        row_nnz.max(), row_nnz.min(), row_nnz.mean(), row_nnz.std(),
+        deg.max(), deg.min(), deg.mean(),
+        bw.astype(jnp.float32), prof.astype(jnp.float32),
+    ])

@@ -1,0 +1,130 @@
+"""Labeling campaign: measure factor+solve time per (matrix, ordering) and
+take the argmin as the training label — the paper's §3.2 protocol with our
+multifrontal solver standing in for MUMPS.
+
+Results are cached to disk (`artifacts/labels_<tag>.npz`) because the
+campaign is the expensive step; benchmarks and examples reuse the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.features import FEATURE_NAMES, extract_features
+from repro.sparse.csr import CSRMatrix, permute_symmetric
+from repro.sparse.dataset import generate_suite
+from repro.sparse.multifrontal import factor_and_solve_timed
+from repro.sparse.reorder import LABEL_ALGORITHMS, get_reordering
+
+__all__ = ["LabeledDataset", "run_labeling_campaign", "load_or_build"]
+
+
+@dataclasses.dataclass
+class LabeledDataset:
+    features: np.ndarray          # (m, 12)
+    labels: np.ndarray            # (m,) index into algorithms
+    times: np.ndarray             # (m, n_alg) measured factor+solve seconds
+    order_times: np.ndarray       # (m, n_alg) ordering computation seconds
+    fills: np.ndarray             # (m, n_alg) fill-in of L
+    flops: np.ndarray             # (m, n_alg) symbolic factor FLOPs
+    names: List[str]
+    groups: List[str]
+    dims: np.ndarray              # (m,)
+    nnzs: np.ndarray              # (m,)
+    algorithms: List[str]
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        np.savez_compressed(
+            path, features=self.features, labels=self.labels,
+            times=self.times, order_times=self.order_times, fills=self.fills,
+            flops=self.flops, dims=self.dims, nnzs=self.nnzs,
+            names=np.array(self.names), groups=np.array(self.groups),
+            algorithms=np.array(self.algorithms),
+            feature_names=np.array(FEATURE_NAMES))
+
+    @staticmethod
+    def load(path: str) -> "LabeledDataset":
+        z = np.load(path, allow_pickle=False)
+        return LabeledDataset(
+            z["features"], z["labels"], z["times"], z["order_times"],
+            z["fills"], z["flops"], [str(s) for s in z["names"]],
+            [str(s) for s in z["groups"]], z["dims"], z["nnzs"],
+            [str(s) for s in z["algorithms"]])
+
+
+def _measure_one(a: CSRMatrix, alg: str, repeats: int) -> Dict:
+    t0 = time.perf_counter()
+    perm = get_reordering(alg)(a)
+    t_order = time.perf_counter() - t0
+    ap = permute_symmetric(a, perm)
+    best: Optional[Dict] = None
+    for _ in range(repeats):
+        r = factor_and_solve_timed(ap)
+        if best is None or r["time"] < best["time"]:
+            best = r
+    assert best is not None
+    best["t_order"] = t_order
+    return best
+
+
+def run_labeling_campaign(
+    mats: Sequence[CSRMatrix],
+    algorithms: Sequence[str] = tuple(LABEL_ALGORITHMS),
+    repeats: int = 1,
+    verbose: bool = False,
+) -> LabeledDataset:
+    m = len(mats)
+    n_alg = len(algorithms)
+    feats = np.zeros((m, len(FEATURE_NAMES)))
+    times = np.zeros((m, n_alg))
+    order_times = np.zeros((m, n_alg))
+    fills = np.zeros((m, n_alg), dtype=np.int64)
+    flops = np.zeros((m, n_alg), dtype=np.int64)
+    names, groups = [], []
+    dims = np.zeros(m, dtype=np.int64)
+    nnzs = np.zeros(m, dtype=np.int64)
+    for i, a in enumerate(mats):
+        feats[i] = extract_features(a)
+        names.append(a.name)
+        groups.append(a.group)
+        dims[i], nnzs[i] = a.n, a.nnz
+        for j, alg in enumerate(algorithms):
+            r = _measure_one(a, alg, repeats)
+            times[i, j] = r["time"]
+            order_times[i, j] = r["t_order"]
+            fills[i, j] = r["fill"]
+            flops[i, j] = r["sym_flops"]
+        if verbose and (i + 1) % 50 == 0:
+            print(f"  labeled {i + 1}/{m}")
+    labels = times.argmin(axis=1)
+    return LabeledDataset(feats, labels, times, order_times, fills, flops,
+                          names, groups, dims, nnzs, list(algorithms))
+
+
+def load_or_build(cache_dir: str = "artifacts", count: int = 960,
+                  seed: int = 0, size_scale: float = 1.0,
+                  repeats: int = 1, verbose: bool = True) -> LabeledDataset:
+    tag = f"c{count}_s{seed}_x{size_scale:g}_r{repeats}"
+    path = os.path.join(cache_dir, f"labels_{tag}.npz")
+    if os.path.exists(path):
+        return LabeledDataset.load(path)
+    if verbose:
+        print(f"[labeling] building suite ({count} matrices, scale "
+              f"{size_scale}) — cached to {path}")
+    mats = list(generate_suite(count=count, seed=seed, size_scale=size_scale))
+    ds = run_labeling_campaign(mats, repeats=repeats, verbose=verbose)
+    ds.save(path)
+    # sidecar summary for humans
+    with open(path.replace(".npz", ".json"), "w") as f:
+        dist = {alg: int((ds.labels == i).sum())
+                for i, alg in enumerate(ds.algorithms)}
+        json.dump(dict(count=len(ds.names), label_distribution=dist,
+                       n_max=int(ds.dims.max()), nnz_max=int(ds.nnzs.max())),
+                  f, indent=2)
+    return ds

@@ -1,0 +1,23 @@
+"""The seven model families of the paper's Fig. 4, implemented from scratch."""
+from .base import BaseClassifier, accuracy_score
+from .decision_tree import DecisionTreeClassifier
+from .jax_models import LogisticRegression, MLPClassifier, SVMClassifier
+from .knn import KNeighborsClassifier
+from .naive_bayes import GaussianNB
+from .random_forest import RandomForestClassifier
+
+MODEL_ZOO = {
+    "random_forest": RandomForestClassifier,
+    "decision_tree": DecisionTreeClassifier,
+    "logistic_regression": LogisticRegression,
+    "naive_bayes": GaussianNB,
+    "svm": SVMClassifier,
+    "mlp": MLPClassifier,
+    "knn": KNeighborsClassifier,
+}
+
+__all__ = [
+    "BaseClassifier", "accuracy_score", "DecisionTreeClassifier",
+    "RandomForestClassifier", "LogisticRegression", "SVMClassifier",
+    "MLPClassifier", "GaussianNB", "KNeighborsClassifier", "MODEL_ZOO",
+]

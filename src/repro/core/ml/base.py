@@ -1,0 +1,58 @@
+"""Minimal scikit-learn-flavoured classifier API (fit/predict/score/clone).
+
+scikit-learn is not available offline, so the seven model families the paper
+evaluates (Fig. 4) are implemented from scratch in this package — trees and
+KNN in numpy, the differentiable models (logistic regression, SVM, MLP) in
+JAX.
+"""
+from __future__ import annotations
+
+import copy
+from typing import Any, Dict
+
+import numpy as np
+
+__all__ = ["BaseClassifier", "accuracy_score"]
+
+
+def accuracy_score(y_true: np.ndarray, y_pred: np.ndarray) -> float:
+    """Acc = P_true / P_all (paper Eq. 4)."""
+    y_true = np.asarray(y_true)
+    y_pred = np.asarray(y_pred)
+    return float((y_true == y_pred).mean()) if y_true.size else 0.0
+
+
+class BaseClassifier:
+    """Subclasses set hyperparameters in __init__ via explicit kwargs and
+    record them in ``self.params`` (used by clone / grid search)."""
+
+    params: Dict[str, Any]
+
+    def __init__(self, **params: Any) -> None:
+        self.params = dict(params)
+
+    def clone(self) -> "BaseClassifier":
+        return type(self)(**copy.deepcopy(self.params))
+
+    def with_params(self, **updates: Any) -> "BaseClassifier":
+        p = dict(self.params)
+        p.update(updates)
+        return type(self)(**p)
+
+    # subclass contract -----------------------------------------------------
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "BaseClassifier":
+        raise NotImplementedError
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def predict_proba(self, x: np.ndarray) -> np.ndarray:
+        # default: one-hot of predict
+        pred = self.predict(x)
+        k = int(self.n_classes_)
+        out = np.zeros((pred.shape[0], k))
+        out[np.arange(pred.shape[0]), pred] = 1.0
+        return out
+
+    def score(self, x: np.ndarray, y: np.ndarray) -> float:
+        return accuracy_score(y, self.predict(x))

@@ -1,0 +1,190 @@
+"""JAX-trained classifiers: multinomial logistic regression, linear / RFF-RBF
+SVM, and MLP. Full-batch Adam, jit-compiled, deterministic.
+
+These are the differentiable members of the paper's Fig. 4 line-up. Training
+sets are ~750×12, so full-batch on one device is instant; the point is that
+they share the same fit/predict surface as the numpy models and run on TPU
+unchanged.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import BaseClassifier
+
+__all__ = ["LogisticRegression", "SVMClassifier", "MLPClassifier"]
+
+
+def _adam_train(loss_fn, params, steps: int, lr: float):
+    """Full-batch Adam via lax.scan (one compiled loop)."""
+
+    @jax.jit
+    def run(params):
+        flat, tree = jax.tree_util.tree_flatten(params)
+        m = [jnp.zeros_like(p) for p in flat]
+        v = [jnp.zeros_like(p) for p in flat]
+
+        def step(carry, i):
+            flat, m, v = carry
+            p = jax.tree_util.tree_unflatten(tree, flat)
+            g = jax.grad(loss_fn)(p)
+            gflat, _ = jax.tree_util.tree_flatten(g)
+            b1, b2, eps = 0.9, 0.999, 1e-8
+            t = i + 1
+            new_flat, new_m, new_v = [], [], []
+            for pi, gi, mi, vi in zip(flat, gflat, m, v):
+                mi = b1 * mi + (1 - b1) * gi
+                vi = b2 * vi + (1 - b2) * gi * gi
+                mh = mi / (1 - b1 ** t)
+                vh = vi / (1 - b2 ** t)
+                new_flat.append(pi - lr * mh / (jnp.sqrt(vh) + eps))
+                new_m.append(mi)
+                new_v.append(vi)
+            return (new_flat, new_m, new_v), 0.0
+
+        (flat, _, _), _ = jax.lax.scan(step, (flat, m, v),
+                                       jnp.arange(steps, dtype=jnp.float32))
+        return jax.tree_util.tree_unflatten(tree, flat)
+
+    return run(params)
+
+
+class LogisticRegression(BaseClassifier):
+    def __init__(self, C: float = 1.0, steps: int = 500, lr: float = 0.05,
+                 random_state: int = 0):
+        super().__init__(C=C, steps=steps, lr=lr, random_state=random_state)
+
+    def fit(self, x, y):
+        x = jnp.asarray(x, dtype=jnp.float32)
+        y = np.asarray(y, dtype=np.int64)
+        self.n_classes_ = int(y.max()) + 1
+        k, d = self.n_classes_, x.shape[1]
+        yj = jnp.asarray(y)
+        p = self.params
+        w = jnp.zeros((d, k), dtype=jnp.float32)
+        b = jnp.zeros((k,), dtype=jnp.float32)
+
+        def loss(params):
+            w, b = params
+            logits = x @ w + b
+            ce = -jnp.take_along_axis(jax.nn.log_softmax(logits),
+                                      yj[:, None], axis=1).mean()
+            return ce + (0.5 / p["C"]) * (w ** 2).sum() / x.shape[0]
+
+        self.w_, self.b_ = _adam_train(loss, (w, b), p["steps"], p["lr"])
+        return self
+
+    def predict_proba(self, x):
+        logits = jnp.asarray(x, dtype=jnp.float32) @ self.w_ + self.b_
+        return np.asarray(jax.nn.softmax(logits, axis=1))
+
+    def predict(self, x):
+        return self.predict_proba(x).argmax(axis=1)
+
+
+class SVMClassifier(BaseClassifier):
+    """One-vs-rest hinge-loss SVM; kernel='rbf' uses random Fourier features
+    (Rahimi–Recht) so the optimization stays a linear JAX problem."""
+
+    def __init__(self, C: float = 1.0, kernel: str = "rbf", gamma: float = 0.5,
+                 n_components: int = 256, steps: int = 500, lr: float = 0.05,
+                 random_state: int = 0):
+        super().__init__(C=C, kernel=kernel, gamma=gamma,
+                         n_components=n_components, steps=steps, lr=lr,
+                         random_state=random_state)
+
+    def _featurize(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.params["kernel"] == "linear":
+            return x
+        return jnp.sqrt(2.0 / self.params["n_components"]) * jnp.cos(
+            x @ self.rff_w_ + self.rff_b_)
+
+    def fit(self, x, y):
+        p = self.params
+        x = jnp.asarray(x, dtype=jnp.float32)
+        y = np.asarray(y, dtype=np.int64)
+        self.n_classes_ = int(y.max()) + 1
+        d = x.shape[1]
+        if p["kernel"] == "rbf":
+            key = jax.random.PRNGKey(p["random_state"])
+            k1, k2 = jax.random.split(key)
+            self.rff_w_ = (jnp.sqrt(2.0 * p["gamma"])
+                           * jax.random.normal(k1, (d, p["n_components"])))
+            self.rff_b_ = jax.random.uniform(
+                k2, (p["n_components"],), maxval=2 * jnp.pi)
+        phi = self._featurize(x)
+        # one-vs-rest targets in {-1, +1}
+        t = -jnp.ones((x.shape[0], self.n_classes_), dtype=jnp.float32)
+        t = t.at[jnp.arange(x.shape[0]), jnp.asarray(y)].set(1.0)
+        w = jnp.zeros((phi.shape[1], self.n_classes_), dtype=jnp.float32)
+        b = jnp.zeros((self.n_classes_,), dtype=jnp.float32)
+
+        def loss(params):
+            w, b = params
+            margins = phi @ w + b
+            hinge = jnp.maximum(0.0, 1.0 - t * margins).mean()
+            return p["C"] * hinge + 0.5 * (w ** 2).sum() / phi.shape[0]
+
+        self.w_, self.b_ = _adam_train(loss, (w, b), p["steps"], p["lr"])
+        return self
+
+    def decision_function(self, x):
+        phi = self._featurize(jnp.asarray(x, dtype=jnp.float32))
+        return np.asarray(phi @ self.w_ + self.b_)
+
+    def predict(self, x):
+        return self.decision_function(x).argmax(axis=1)
+
+
+class MLPClassifier(BaseClassifier):
+    def __init__(self, hidden_layer_sizes: Sequence[int] = (64, 32),
+                 steps: int = 800, lr: float = 0.01, alpha: float = 1e-4,
+                 random_state: int = 0):
+        super().__init__(hidden_layer_sizes=tuple(hidden_layer_sizes),
+                         steps=steps, lr=lr, alpha=alpha,
+                         random_state=random_state)
+
+    def fit(self, x, y):
+        p = self.params
+        x = jnp.asarray(x, dtype=jnp.float32)
+        y = np.asarray(y, dtype=np.int64)
+        self.n_classes_ = int(y.max()) + 1
+        yj = jnp.asarray(y)
+        sizes = [x.shape[1], *p["hidden_layer_sizes"], self.n_classes_]
+        key = jax.random.PRNGKey(p["random_state"])
+        params = []
+        for i in range(len(sizes) - 1):
+            key, sub = jax.random.split(key)
+            scale = jnp.sqrt(2.0 / sizes[i])
+            params.append((scale * jax.random.normal(sub, (sizes[i], sizes[i + 1])),
+                           jnp.zeros((sizes[i + 1],))))
+
+        def forward(params, x):
+            h = x
+            for (w, b) in params[:-1]:
+                h = jax.nn.relu(h @ w + b)
+            w, b = params[-1]
+            return h @ w + b
+
+        def loss(params):
+            logits = forward(params, x)
+            ce = -jnp.take_along_axis(jax.nn.log_softmax(logits),
+                                      yj[:, None], axis=1).mean()
+            l2 = sum((w ** 2).sum() for (w, _) in params)
+            return ce + p["alpha"] * l2
+
+        self.params_ = _adam_train(loss, params, p["steps"], p["lr"])
+        self._forward = forward
+        return self
+
+    def predict_proba(self, x):
+        logits = self._forward(self.params_, jnp.asarray(x, dtype=jnp.float32))
+        return np.asarray(jax.nn.softmax(logits, axis=1))
+
+    def predict(self, x):
+        return self.predict_proba(x).argmax(axis=1)

@@ -1,0 +1,63 @@
+"""Feature normalization: Max-Min scaling and Standardization (paper §4.2)."""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["MinMaxScaler", "StandardScaler", "IdentityScaler", "SCALERS"]
+
+
+class IdentityScaler:
+    def fit(self, x: np.ndarray) -> "IdentityScaler":
+        return self
+
+    def transform(self, x: np.ndarray) -> np.ndarray:
+        return np.asarray(x, dtype=np.float64)
+
+    def fit_transform(self, x: np.ndarray) -> np.ndarray:
+        return self.fit(x).transform(x)
+
+    def state(self) -> dict:
+        return {}
+
+    def load_state(self, state: dict) -> None:
+        pass
+
+
+class MinMaxScaler(IdentityScaler):
+    def fit(self, x: np.ndarray) -> "MinMaxScaler":
+        x = np.asarray(x, dtype=np.float64)
+        self.min_ = x.min(axis=0)
+        span = x.max(axis=0) - self.min_
+        self.scale_ = np.where(span > 0, span, 1.0)
+        return self
+
+    def transform(self, x: np.ndarray) -> np.ndarray:
+        return (np.asarray(x, dtype=np.float64) - self.min_) / self.scale_
+
+    def state(self) -> dict:
+        return dict(min=self.min_, scale=self.scale_)
+
+    def load_state(self, state: dict) -> None:
+        self.min_, self.scale_ = state["min"], state["scale"]
+
+
+class StandardScaler(IdentityScaler):
+    def fit(self, x: np.ndarray) -> "StandardScaler":
+        x = np.asarray(x, dtype=np.float64)
+        self.mean_ = x.mean(axis=0)
+        std = x.std(axis=0)
+        self.std_ = np.where(std > 0, std, 1.0)
+        return self
+
+    def transform(self, x: np.ndarray) -> np.ndarray:
+        return (np.asarray(x, dtype=np.float64) - self.mean_) / self.std_
+
+    def state(self) -> dict:
+        return dict(mean=self.mean_, std=self.std_)
+
+    def load_state(self, state: dict) -> None:
+        self.mean_, self.std_ = state["mean"], state["std"]
+
+
+SCALERS = {"minmax": MinMaxScaler, "standard": StandardScaler,
+           "none": IdentityScaler}

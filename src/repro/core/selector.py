@@ -1,0 +1,133 @@
+"""End-to-end reordering-algorithm selector — the paper's deliverable.
+
+``ReorderSelector`` = feature extraction → scaler → classifier → algorithm
+name. ``fit_from_dataset`` trains it from a :class:`LabeledDataset`;
+``select``/``predict_matrix`` run the trained pipeline on a new matrix
+(the ~16 ms path of the paper's Table 5).
+"""
+from __future__ import annotations
+
+import pickle
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.features import extract_features
+from repro.core.labeling import LabeledDataset
+from repro.core.ml import MODEL_ZOO, BaseClassifier, accuracy_score
+from repro.core.model_selection import GridSearchCV, train_test_split
+from repro.core.scaling import SCALERS
+from repro.sparse.csr import CSRMatrix
+
+__all__ = ["ReorderSelector", "DEFAULT_GRIDS", "train_selector"]
+
+
+# Hyperparameter grids per model family (paper §3.4: "candidate values are
+# usually given by empirical methods").
+DEFAULT_GRIDS: Dict[str, Dict[str, Sequence]] = {
+    "random_forest": {
+        "criterion": ["gini"],
+        "min_samples_leaf": [1, 2],
+        "min_samples_split": [2, 5],
+        "n_estimators": [50, 100],
+    },
+    "decision_tree": {
+        "criterion": ["gini", "entropy"],
+        "max_depth": [None, 8, 16],
+        "min_samples_leaf": [1, 2, 5],
+    },
+    "logistic_regression": {"C": [0.1, 1.0, 10.0], "steps": [500]},
+    "naive_bayes": {"var_smoothing": [1e-9, 1e-6]},
+    "svm": {"C": [1.0, 10.0], "gamma": [0.1, 0.5], "kernel": ["rbf"]},
+    "mlp": {"hidden_layer_sizes": [(64, 32), (128,)], "lr": [0.01]},
+    "knn": {"n_neighbors": [3, 5, 9], "weights": ["uniform", "distance"]},
+}
+
+# Smaller grids for smoke-speed runs.
+FAST_GRIDS: Dict[str, Dict[str, Sequence]] = {
+    k: {p: v[:1] for p, v in g.items()} for k, g in DEFAULT_GRIDS.items()
+}
+
+
+class ReorderSelector:
+    def __init__(self, model: BaseClassifier, scaler, algorithms: List[str]):
+        self.model = model
+        self.scaler = scaler
+        self.algorithms = algorithms
+
+    # -- inference -----------------------------------------------------------
+    def predict_features(self, feats: np.ndarray) -> np.ndarray:
+        feats = np.atleast_2d(feats)
+        return self.model.predict(self.scaler.transform(feats))
+
+    def select(self, a: CSRMatrix) -> Tuple[str, float]:
+        """Returns (algorithm name, prediction seconds) — Table 5's columns."""
+        t0 = time.perf_counter()
+        feats = extract_features(a)
+        idx = int(self.predict_features(feats)[0])
+        return self.algorithms[idx], time.perf_counter() - t0
+
+    def accuracy(self, feats: np.ndarray, labels: np.ndarray) -> float:
+        return accuracy_score(labels, self.predict_features(feats))
+
+    # -- persistence -----------------------------------------------------------
+    def save(self, path: str) -> None:
+        with open(path, "wb") as f:
+            pickle.dump(self, f)
+
+    @staticmethod
+    def load(path: str) -> "ReorderSelector":
+        with open(path, "rb") as f:
+            obj = pickle.load(f)
+        assert isinstance(obj, ReorderSelector)
+        return obj
+
+
+def train_selector(
+    ds: LabeledDataset,
+    model_name: str = "random_forest",
+    scaling: str = "standard",
+    test_size: float = 0.2,
+    seed: int = 0,
+    cv: int = 5,
+    grid: Optional[Dict[str, Sequence]] = None,
+    fast: bool = False,
+):
+    """Grid-search + refit a selector; returns (selector, report dict).
+
+    The report carries everything the paper's evaluation needs: test
+    accuracy, indices of the split, per-scenario totals (AMD / predicted /
+    ideal — Table 6), and the mean speedup vs AMD (the 1.45× claim).
+    """
+    x, y = ds.features, ds.labels
+    xtr, xte, ytr, yte, itr, ite = train_test_split(x, y, test_size, seed)
+    scaler = SCALERS[scaling]().fit(xtr)
+    grids = FAST_GRIDS if fast else DEFAULT_GRIDS
+    gs = GridSearchCV(MODEL_ZOO[model_name](), grid or grids[model_name],
+                      cv=cv, seed=seed)
+    gs.fit(scaler.transform(xtr), ytr)
+    sel = ReorderSelector(gs.best_model_, scaler, list(ds.algorithms))
+
+    pred = sel.predict_features(xte)
+    acc = accuracy_score(yte, pred)
+
+    amd_idx = ds.algorithms.index("amd")
+    t_amd = ds.times[ite, amd_idx].sum()
+    t_pred = ds.times[ite, pred].sum()
+    t_ideal = ds.times[ite].min(axis=1).sum()
+    speedups = ds.times[ite, amd_idx] / np.maximum(ds.times[ite, pred], 1e-12)
+
+    report = dict(
+        model=model_name, scaling=scaling,
+        best_params=gs.best_params_, cv_score=gs.best_score_,
+        test_accuracy=acc,
+        test_idx=ite, train_idx=itr, predictions=pred,
+        time_amd=float(t_amd), time_predicted=float(t_pred),
+        time_ideal=float(t_ideal),
+        reduction_vs_amd=float(1.0 - t_pred / t_amd) if t_amd > 0 else 0.0,
+        excess_vs_ideal=float(t_pred / t_ideal - 1.0) if t_ideal > 0 else 0.0,
+        mean_speedup_vs_amd=float(speedups.mean()),
+        max_speedup_vs_amd=float(speedups.max()),
+    )
+    return sel, report

@@ -1,0 +1,11 @@
+"""Distribution substrate: mesh context, sharding rules, gradient
+compression."""
+from .gradient_compression import compressed_psum, init_error_state
+from .meshctx import MeshContext, get_mesh_context, mesh_context, set_mesh_context
+from .sharding import (ExecutionPlan, batch_specs, cache_specs,
+                       opt_state_spec_for, param_specs, to_shardings)
+
+__all__ = ["compressed_psum", "init_error_state", "MeshContext",
+           "get_mesh_context", "mesh_context", "set_mesh_context",
+           "ExecutionPlan", "batch_specs", "cache_specs",
+           "opt_state_spec_for", "param_specs", "to_shardings"]

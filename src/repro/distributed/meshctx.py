@@ -1,0 +1,67 @@
+"""Mesh context threaded through model code.
+
+Model forward functions are mesh-agnostic except for the MoE layer, whose
+dropless sort+ragged_dot dispatch must stay *local* to each data shard
+(a global argsort under GSPMD all-gathers the token buffer). The launcher
+sets the active context; when no mesh is set (unit tests, single CPU), the
+MoE layer runs its local path directly with unsharded weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["MeshContext", "set_mesh_context", "get_mesh_context",
+           "mesh_context"]
+
+
+@dataclasses.dataclass
+class MeshContext:
+    mesh: Optional[jax.sharding.Mesh]
+    data_axes: Tuple[str, ...] = ("data",)   # ('pod', 'data') multi-pod
+    model_axis: str = "model"
+    # When attention is DP-only (heads don't tile the model axis), the
+    # attention block reshards its activations over data+model so the model
+    # axis isn't idle — see transformer._attn_apply.
+    attn_dp_axes: Optional[Tuple[str, ...]] = None
+    # Shard remat residuals' sequence dim over the model axis (see
+    # ExecutionPlan.shard_activation_ckpt).
+    shard_activation_ckpt: bool = False
+    # Decode with a sequence-sharded KV cache through the shard_map
+    # flash-decode path (layers.sharded_decode_attention): axes the cache's
+    # seq dim is sharded over, or None for the plain GSPMD path.
+    decode_seq_axes: Optional[Tuple[str, ...]] = None
+
+    @property
+    def batch_spec_axes(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+
+_CURRENT = MeshContext(mesh=None)
+
+
+def set_mesh_context(ctx: MeshContext) -> None:
+    global _CURRENT
+    _CURRENT = ctx
+
+
+def get_mesh_context() -> MeshContext:
+    return _CURRENT
+
+
+class mesh_context:
+    """with mesh_context(MeshContext(mesh, ...)): ..."""
+
+    def __init__(self, ctx: MeshContext):
+        self.ctx = ctx
+
+    def __enter__(self):
+        self.prev = get_mesh_context()
+        set_mesh_context(self.ctx)
+        return self.ctx
+
+    def __exit__(self, *exc):
+        set_mesh_context(self.prev)
+        return False

@@ -1,0 +1,236 @@
+"""Sharding rules: parameter / optimizer / batch / cache PartitionSpecs.
+
+Layout summary (mesh axes: optional 'pod', 'data', 'model'):
+
+* batch dims           → ('pod', 'data')                     (DP)
+* attention heads, FFN hidden, expert hidden, d_inner, vocab → 'model' (TP/EP)
+* optimizer state      → additionally sharded over 'data'    (ZeRO)
+* params               → replicated over 'data' by default; ``plan.fsdp_params``
+                         shards them over 'data' too (FSDP), trading an
+                         all-gather per use for 1/|data| residency.
+* KV caches            → batch over 'data' when batch ≥ |data|, else the
+                         sequence axis over 'data' (sequence parallelism for
+                         long_500k's batch=1).
+
+`ExecutionPlan` is the knob set the autotuner (repro.autotune) selects over.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig, ShapeSpec
+
+__all__ = ["ExecutionPlan", "param_specs", "opt_state_spec_for",
+           "batch_specs", "cache_specs", "to_shardings"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Execution-strategy choices for one (arch × shape × mesh) cell."""
+    fsdp_params: bool = False
+    remat: str = "layer"            # none | layer
+    moe_impl: str = "tp_ragged"     # tp_ragged | ep
+    attn_q_chunk: int = 1024
+    attn_kv_chunk: int = 1024
+    grad_compression: bool = False  # int8 + error feedback on the DP axis
+    scan_layers: bool = True
+    # pure_dp: no tensor parallelism — the whole mesh is one flat DP/FSDP
+    # domain (params ZeRO-3-sharded over every axis, batch over every axis).
+    # Valid for dense archs whose per-layer weights fit one chip; kills the
+    # per-layer TP activation all-reduces entirely.
+    pure_dp: bool = False
+    # For DP-only attention (heads ∤ model axis): reshard the attention
+    # block's activations over data+model. Measured NET-NEGATIVE on
+    # starcoder2 (GSPMD reshard storms outweigh the extra parallelism) —
+    # kept as an explicit knob, default off.
+    attn_batch_reshard: bool = False
+    # Shard the per-group remat residual (the scan-saved (B,S,D) stack) over
+    # the model axis on the sequence dim: 1/|model| the residency for one
+    # extra all-gather per group in backward (MaxText's "checkpoint
+    # sharding").
+    shard_activation_ckpt: bool = False
+    # Decode over a sequence-sharded KV cache via the shard_map flash-decode
+    # path instead of GSPMD's gather (long_500k batch-1 cells).
+    seq_shard_decode: bool = False
+
+    def apply(self, cfg: ModelConfig) -> ModelConfig:
+        return dataclasses.replace(
+            cfg, remat=self.remat, moe_impl=self.moe_impl,
+            attn_q_chunk=self.attn_q_chunk, attn_kv_chunk=self.attn_kv_chunk,
+            scan_layers=self.scan_layers)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _rule(path: Tuple[str, ...], shape: Tuple[int, ...], tp: str,
+          fsdp, attn_tp: bool = True) -> P:
+    """Spec for one (unstacked) parameter leaf."""
+    name = path[-1]
+    in_moe = "mlp" in path and ("wg" == name or "wu" == name or "wd" == name
+                                ) and len(shape) == 3
+    if in_moe:  # (E, D, F) / (E, F, D) — expert-TP layout (F on model)
+        if name in ("wg", "wu"):
+            return P(None, fsdp, tp)
+        return P(None, tp, fsdp)
+    if name == "router":
+        return P(None, None)
+    if name == "embed":
+        return P(tp, fsdp)
+    if name == "lm_head":
+        return P(fsdp, tp)
+    if name in ("wq", "wk", "wv"):
+        # heads that don't tile the model axis force GSPMD into replicate-
+        # and-reshard storms around the (B,S,H,hd) reshape (measured 6.7 TB
+        # of all-reduce on starcoder2's 36 heads × 16-way mesh). DP-only
+        # attention (replicated qkv/o weights) is strictly better then.
+        return P(fsdp, tp) if attn_tp else P(fsdp, None)
+    if name == "wo":
+        return P(tp, fsdp) if attn_tp else P(None, fsdp)
+    if name in ("wg", "wu", "wi", "up_proj", "in_proj", "up_w", "w_izfo"):
+        return P(fsdp, tp)
+    if name in ("wd", "out_proj", "down_w"):
+        return P(tp, fsdp)
+    if name in ("x_proj", "a_log", "i_gate", "f_gate"):
+        return P(tp, None)
+    if name in ("dt_proj",):
+        return P(None, tp)
+    if name in ("q_proj", "k_proj", "v_proj"):
+        return P(None, tp)
+    if name in ("conv_w",):
+        return P(None, tp)
+    if name in ("conv_b", "dt_bias", "d_skip", "gn_scale") and len(shape) == 1:
+        return P(tp)
+    # norms, biases, small states: replicated
+    return P(*([None] * len(shape)))
+
+
+def param_specs(params: Dict[str, Any], cfg: ModelConfig,
+                plan: ExecutionPlan, *, model_axis: str = "model",
+                data_axes: Tuple[str, ...] = ("data",),
+                n_model: int = 16) -> Dict[str, Any]:
+    if plan.pure_dp:
+        assert cfg.num_experts == 0, (
+            "pure_dp is for dense archs (experts need the model axis)")
+        fsdp = tuple(dict.fromkeys(tuple(data_axes) + (model_axis,)))
+        model_axis = None  # type: ignore[assignment]
+    else:
+        fsdp = data_axes if plan.fsdp_params else None
+    # TP on attention only when the q heads tile the model axis (kv-only
+    # indivisibility is handled acceptably by GSPMD: measured 4.34s vs 4.56s
+    # dominant term on llama; q-head indivisibility is catastrophic:
+    # 137s vs 11.8s on starcoder2)
+    attn_tp = cfg.num_heads % n_model == 0
+
+    def visit(path, leaf):
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path)
+        shape = leaf.shape
+        if names and names[0] == "groups":
+            spec = _rule(names, shape[1:], model_axis, fsdp, attn_tp)
+            return P(None, *spec)
+        return _rule(names, shape, model_axis, fsdp, attn_tp)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def opt_state_spec_for(param_spec: P, shape: Tuple[int, ...],
+                       data_axes: Tuple[str, ...], mesh) -> P:
+    """ZeRO: additionally shard the optimizer moments / master weights over
+    the data axes on the first divisible unsharded dim (skipping axes the
+    param layout already uses, e.g. under pure_dp/FSDP)."""
+    used = set()
+    for e in param_spec:
+        if e is None:
+            continue
+        for ax in (e if isinstance(e, tuple) else (e,)):
+            used.add(ax)
+    free_axes = tuple(ax for ax in data_axes if ax not in used)
+    if not free_axes:
+        return param_spec
+    n_data = 1
+    for ax in free_axes:
+        n_data *= mesh.shape[ax]
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % n_data == 0 and dim >= n_data:
+            entries[i] = free_axes if len(free_axes) > 1 else free_axes[0]
+            return P(*entries)
+    return param_spec  # nothing divisible: keep the param layout
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec,
+                data_axes: Tuple[str, ...] = ("data",)) -> Dict[str, P]:
+    da = data_axes if len(data_axes) > 1 else data_axes[0]
+    specs: Dict[str, P] = {}
+    if cfg.input_mode == "tokens":
+        specs["tokens"] = P(da, None)
+    else:
+        specs["embeds"] = P(da, None, None)
+        if cfg.mrope:
+            specs["positions3"] = P(None, da, None)
+    if shape.kind == "train":
+        specs["labels"] = P(da, None)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                *, model_axis: str = "model",
+                data_axes: Tuple[str, ...] = ("data",)) -> Dict[str, Any]:
+    """Specs mirroring init_cache's pytree."""
+    n_data = 1
+    for ax in data_axes:
+        n_data *= mesh.shape[ax]
+    n_model = mesh.shape[model_axis]
+    da = data_axes if len(data_axes) > 1 else data_axes[0]
+    batch_sharded = shape.global_batch % n_data == 0 and shape.global_batch >= n_data
+    bspec = da if batch_sharded else None
+    seq_data = None if batch_sharded else da  # sequence parallelism (batch=1)
+
+    # KV heads shard over 'model' only when divisible; otherwise the model
+    # axis moves to the sequence dim (flash-decode style sharded-softmax).
+    heads_on_model = cfg.num_kv_heads % n_model == 0
+    head_spec = model_axis if heads_on_model else None
+    if heads_on_model:
+        seq_spec = seq_data
+    elif seq_data is None:
+        seq_spec = model_axis
+    else:  # both data (batch=1) and model on the sequence axis
+        seq_spec = (tuple(data_axes) + (model_axis,)
+                    if isinstance(da, tuple) else (da, model_axis))
+
+    def slot_spec(kind):
+        if kind == "a":
+            kv = P(bspec, head_spec, seq_spec, None)
+            return dict(k=kv, v=kv)
+        if kind == "m":
+            return dict(conv=P(bspec, None, model_axis),
+                        ssm=P(bspec, model_axis, None))
+        if kind == "M":
+            return dict(C=P(bspec, None, None, None),
+                        n=P(bspec, None, None),
+                        conv=P(bspec, None, model_axis))
+        return dict(c=P(bspec, None), n=P(bspec, None), h=P(bspec, None),
+                    m=P(bspec, None))
+
+    groups = {f"s{j}": slot_spec(k) for j, k in enumerate(cfg.block_pattern)}
+    groups = jax.tree_util.tree_map(
+        lambda p: P(None, *p), groups,
+        is_leaf=lambda x: isinstance(x, P))
+    return dict(pos=P(), groups=groups)
+
+
+def to_shardings(tree_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

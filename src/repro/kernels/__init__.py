@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+* ``flash_attention``  — streaming softmax attention (LM substrate).
+* ``frontal_cholesky`` — dense-front partial factorization tiles
+                         (multifrontal sparse solver).
+* ``spmv_bell``        — block-ELL SpMV with scalar-prefetch gather.
+
+``ops`` holds the jit'd public wrappers (interpret-mode on CPU);
+``ref`` holds the pure-jnp oracles the tests assert against.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

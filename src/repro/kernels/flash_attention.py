@@ -1,0 +1,107 @@
+"""Flash attention (online-softmax streaming) Pallas TPU kernel.
+
+Grid layout: ``(batch×heads, q_blocks, kv_blocks)`` with the kv axis minor —
+TPU grids execute sequentially over the minor dimension, so the running
+(max, sum, acc) statistics live in VMEM scratch across kv iterations and the
+output block is written once, on the last kv step.
+
+Tiling: q/k/v blocks of (block_q/block_kv, head_dim) in VMEM; head_dim is
+expected MXU-aligned (128 for every assigned architecture). The f32
+accumulator keeps softmax numerics independent of the bf16 inputs.
+
+The public entry points (GQA handling, padding, causal/decode modes) are in
+:mod:`repro.kernels.ops`; the pure-jnp oracle is
+:func:`repro.kernels.ref.attention_ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  sm_scale: float, causal: bool, block_q: int, block_kv: int,
+                  kv_blocks: int, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+
+    kpos = ki * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    mask = kpos < kv_len  # padded keys never contribute
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        mask = mask & (qpos >= kpos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[:, 0] = l_ref[:, 0] * alpha + p.sum(axis=1)
+    v = v_ref[0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, sm_scale: float | None = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    kv_len: int | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, D); k, v: (BH, Skv, D). Sq/Skv must be multiples of the
+    block sizes (callers pad; `kv_len` masks the padding)."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    assert sq % block_q == 0 and skv % block_kv == 0, (sq, skv)
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    if kv_len is None:
+        kv_len = skv
+    kv_blocks = skv // block_kv
+    grid = (bh, sq // block_q, kv_blocks)
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal, block_q=block_q,
+        block_kv=block_kv, kv_blocks=kv_blocks, kv_len=kv_len)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

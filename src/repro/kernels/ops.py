@@ -1,0 +1,141 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU hosts (this container, unit tests) the kernels execute in
+``interpret=True`` mode — the kernel body runs as traced JAX ops, which
+validates BlockSpec indexing and numerics exactly. On TPU the same calls
+compile through Mosaic. `_interpret()` picks automatically.
+
+The LM model code keeps an XLA (einsum) attention path for CPU dry-runs and
+uses :func:`attention` on real TPU — see `repro.models.layers.Attention`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .flash_attention import flash_attention
+from .frontal_cholesky import chol_tile, matmul_nt, tri_inv_tile
+from .spmv_bell import bell_spmv, csr_to_bell
+
+__all__ = ["attention", "frontal_factor", "spmv", "matmul_nt_padded"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, block_q: int = 128,
+              block_kv: int = 128) -> jax.Array:
+    """GQA flash attention. q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D).
+
+    Repeats KV heads to match Q heads, pads sequences to block multiples
+    (padded keys are masked via kv_len), and restores the original shape.
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    qf = _pad_to(q.reshape(b * hq, sq, d), 1, block_q)
+    kf = _pad_to(k.reshape(b * hq, skv, d), 1, block_kv)
+    vf = _pad_to(v.reshape(b * hq, skv, d), 1, block_kv)
+    out = flash_attention(qf, kf, vf, causal=causal, block_q=block_q,
+                          block_kv=block_kv, kv_len=skv,
+                          interpret=_interpret())
+    return out[:, :sq].reshape(b, hq, sq, d)
+
+
+def matmul_nt_padded(a: jax.Array, b: jax.Array, c: jax.Array, *,
+                     alpha: float = 1.0, beta: float = 1.0,
+                     bs: int = 128) -> jax.Array:
+    """beta*c + alpha*a@bᵀ for arbitrary shapes (zero-pads to tiles)."""
+    m, n = c.shape
+    ap = _pad_to(_pad_to(a, 0, bs), 1, bs)
+    bp = _pad_to(_pad_to(b, 0, bs), 1, bs)
+    cp = _pad_to(_pad_to(c, 0, bs), 1, bs)
+    out = matmul_nt(ap, bp, cp, alpha=alpha, beta=beta, bm=bs, bn=bs, bk=bs,
+                    interpret=_interpret())
+    return out[:m, :n]
+
+
+def frontal_factor(f: jax.Array, npiv: int, *, bs: int = 128
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Partial Cholesky of a frontal matrix (lower triangle of `f` is read).
+
+    Returns (L11, L21, S) like :func:`repro.kernels.ref.partial_cholesky_ref`.
+    Layout: the pivot block is padded to a tile multiple with identity
+    columns (decoupled, factor to 1.0, contribute nothing), so tile loops
+    stay 128-aligned regardless of npiv.
+    """
+    f = jnp.asarray(f, jnp.float32)
+    m = f.shape[0]
+    nrest = m - npiv
+    P = ((npiv + bs - 1) // bs) * bs
+    Rp = ((nrest + bs - 1) // bs) * bs if nrest else 0
+    M = P + Rp
+    interp = _interpret()
+
+    W = jnp.zeros((M, M), jnp.float32)
+    W = W.at[:npiv, :npiv].set(jnp.tril(f[:npiv, :npiv]))
+    if P > npiv:
+        pad_idx = jnp.arange(npiv, P)
+        W = W.at[pad_idx, pad_idx].set(1.0)
+    if nrest:
+        W = W.at[P : P + nrest, :npiv].set(f[npiv:, :npiv])
+        W = W.at[P : P + nrest, P : P + nrest].set(jnp.tril(f[npiv:, npiv:]))
+
+    for t in range(P // bs):
+        lo = t * bs
+        tile = jax.lax.dynamic_slice(W, (lo, lo), (bs, bs))
+        ltt = chol_tile(tile, interpret=interp)
+        W = jax.lax.dynamic_update_slice(W, ltt, (lo, lo))
+        rows_below = M - lo - bs
+        if rows_below == 0:
+            continue
+        inv = tri_inv_tile(ltt, interpret=interp)
+        panel = jax.lax.dynamic_slice(W, (lo + bs, lo), (rows_below, bs))
+        lpanel = matmul_nt(panel, inv, jnp.zeros_like(panel), alpha=1.0,
+                           beta=0.0, bm=bs, bn=bs, bk=bs, interpret=interp)
+        W = jax.lax.dynamic_update_slice(W, lpanel, (lo + bs, lo))
+        trail = jax.lax.dynamic_slice(W, (lo + bs, lo + bs),
+                                      (rows_below, rows_below))
+        trail = matmul_nt(lpanel, lpanel, trail, alpha=-1.0, beta=1.0,
+                          bm=bs, bn=bs, bk=bs, interpret=interp)
+        W = jax.lax.dynamic_update_slice(W, trail, (lo + bs, lo + bs))
+
+    L11 = jnp.tril(W[:npiv, :npiv])
+    L21 = W[P : P + nrest, :npiv]
+    S = W[P : P + nrest, P : P + nrest]
+    S = jnp.tril(S) + jnp.tril(S, -1).T  # lower is authoritative
+    return L11, L21, S
+
+
+def spmv(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,
+         x: np.ndarray, *, bs: int = 8) -> np.ndarray:
+    """CSR SpMV through the block-ELL kernel (host-side layout conversion)."""
+    n = x.shape[0]
+    blocks, idx, npad = csr_to_bell(indptr, indices, data, n, bs)
+    xp = np.zeros(npad, dtype=np.float32)
+    xp[:n] = x
+    y = bell_spmv(jnp.asarray(blocks, jnp.float32), jnp.asarray(idx),
+                  jnp.asarray(xp), interpret=_interpret())
+    return np.asarray(y)[:n]

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "partial_cholesky_ref", "matmul_nt_ref",
+           "bell_spmv_ref"]
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  sm_scale: float | None = None,
+                  kv_len: int | None = None):
+    """q: (BH, Sq, D); k/v: (BH, Skv, D) — plain softmax attention."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if kv_len is not None:
+        mask = mask & (jnp.arange(skv)[None, :] < kv_len)
+    if causal:
+        mask = mask & (jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :])
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def partial_cholesky_ref(f, npiv: int):
+    """Dense partial factorization oracle: returns (L11, L21, S)."""
+    f = jnp.asarray(f, dtype=jnp.float32)
+    f11 = f[:npiv, :npiv]
+    # symmetrize from the lower triangle (fronts only fill the lower part)
+    f11 = jnp.tril(f11) + jnp.tril(f11, -1).T
+    l11 = jnp.linalg.cholesky(f11)
+    f21 = f[npiv:, :npiv]
+    l21 = jax.scipy.linalg.solve_triangular(l11, f21.T, lower=True).T
+    f22 = f[npiv:, npiv:]
+    f22 = jnp.tril(f22) + jnp.tril(f22, -1).T
+    s = f22 - l21 @ l21.T
+    return l11, l21, s
+
+
+def matmul_nt_ref(a, b, c, *, alpha: float = 1.0, beta: float = 1.0):
+    return beta * jnp.asarray(c, jnp.float32) + alpha * (
+        jnp.asarray(a, jnp.float32) @ jnp.asarray(b, jnp.float32).T)
+
+
+def bell_spmv_ref(blocks, idx, x):
+    """Oracle for block-ELL SpMV: densify and multiply."""
+    nrb, max_k, bs, _ = blocks.shape
+    n = nrb * bs
+    a = jnp.zeros((n, n), dtype=jnp.float32)
+    for r in range(nrb):
+        for k in range(max_k):
+            c = int(idx[r, k])
+            a = a.at[r * bs:(r + 1) * bs, c * bs:(c + 1) * bs].add(
+                jnp.asarray(blocks[r, k], jnp.float32))
+    return a @ jnp.asarray(x, jnp.float32)

@@ -1,0 +1,8 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve CLIs.
+
+NOTE: do not import `repro.launch.dryrun` from library code — it sets
+XLA_FLAGS at import time (by design: it must run as its own process).
+"""
+from .mesh import make_production_mesh, mesh_axes
+
+__all__ = ["make_production_mesh", "mesh_axes"]

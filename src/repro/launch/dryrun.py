@@ -1,0 +1,299 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell on
+the production mesh with 512 placeholder host devices, and extract the
+roofline inputs from the compiled artifact.
+
+MUST be run as its own process (the XLA_FLAGS line above executes before any
+other import — jax locks the device count on first init). One cell per
+invocation keeps compile memory bounded and lets the sweep be resumable:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape train_4k [--multi-pod] [--plan-json '{"fsdp_params": true}']
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # full sweep
+
+Per cell it writes ``artifacts/dryrun/<mesh>/<arch>__<shape>[__tag].json``
+holding memory_analysis, cost_analysis, loop-corrected dot FLOPs, and
+per-kind collective bytes (see repro.launch.hlo_analysis). §Roofline in
+EXPERIMENTS.md is generated from these artifacts by benchmarks/roofline.py.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.distributed.meshctx import MeshContext, mesh_context
+from repro.distributed.sharding import (ExecutionPlan, batch_specs,
+                                        cache_specs, opt_state_spec_for,
+                                        param_specs, to_shardings)
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.models.config import SHAPES, ModelConfig, ShapeSpec
+from repro.models.transformer import (decode_step, init_cache, init_params,
+                                      loss_fn, prefill)
+from repro.train.data import input_specs
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+# v5e hardware constants for the roofline terms
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # B/s per chip
+ICI_BW = 50e9              # B/s per link (per-device wire bytes / this)
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """Returns a skip reason or None."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("skipped: pure full-attention arch — 500k-token decode is "
+                "reserved for sub-quadratic (SSM/hybrid) archs per the "
+                "assignment (see DESIGN.md §Arch-applicability)")
+    return None
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, data_axes,
+               model_axis, plan: ExecutionPlan):
+    """Returns (fn, example_args, in_shardings, donate) for the cell."""
+    cfg = plan.apply(cfg)
+    if plan.pure_dp:
+        # flat DP/FSDP over every mesh axis: batch shards over all of them
+        data_axes = tuple(dict.fromkeys(tuple(data_axes) + (model_axis,)))
+    n_model = int(mesh.shape[model_axis])
+    attn_tp = cfg.num_heads % n_model == 0
+    attn_dp = (tuple(data_axes) + (model_axis,)
+               if (not attn_tp and not plan.pure_dp
+                   and plan.attn_batch_reshard) else None)
+    ctx = MeshContext(mesh, tuple(data_axes), model_axis,
+                      attn_dp_axes=attn_dp,
+                      shard_activation_ckpt=plan.shard_activation_ckpt)
+    with mesh_context(ctx):
+        pshape = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = param_specs(pshape, cfg, plan, model_axis=model_axis,
+                         data_axes=tuple(data_axes),
+                         n_model=int(mesh.shape[model_axis]))
+    pshard = to_shardings(pspecs, mesh)
+    batch_sds = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        oshape = jax.eval_shape(init_opt_state, pshape)
+        from jax.sharding import PartitionSpec as P
+        ospecs = dict(master=jax.tree_util.tree_map(
+            lambda s, l: opt_state_spec_for(s, l.shape, tuple(data_axes), mesh),
+            pspecs, oshape["master"],
+            is_leaf=lambda x: isinstance(x, P)))
+        ospecs["m"] = ospecs["master"]
+        ospecs["v"] = ospecs["master"]
+        ospecs["count"] = P()
+        oshard = to_shardings(ospecs, mesh)
+        bshard = to_shardings(batch_specs(cfg, shape, tuple(data_axes)), mesh)
+        ocfg = AdamWConfig()
+
+        def train_step(params, opt, batch, step):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+            params, opt, om = adamw_update(grads, opt, params, ocfg, 1.0)
+            return params, opt, dict(loss=loss, **metrics, **om)
+
+        args = (pshape, oshape, batch_sds, jnp.int32(0))
+        in_sh = (pshard, oshard, bshard, None)
+        return train_step, args, in_sh, (0, 1), ctx
+
+    if shape.kind == "prefill":
+        bshard = to_shardings(batch_specs(cfg, shape, tuple(data_axes)), mesh)
+
+        def prefill_step(params, batch):
+            return prefill(cfg, params, batch, max_seq=shape.seq_len)
+
+        args = (pshape, batch_sds)
+        return prefill_step, args, (pshard, bshard), (), ctx
+
+    # decode: one token against a seq_len cache
+    n_data_sz = 1
+    for ax in data_axes:
+        n_data_sz *= mesh.shape[ax]
+    batch_sharded = (shape.global_batch % n_data_sz == 0
+                     and shape.global_batch >= n_data_sz)
+    if plan.seq_shard_decode and not batch_sharded:
+        heads_on_model = cfg.num_kv_heads % n_model == 0
+        seq_axes = (tuple(data_axes) if heads_on_model
+                    else tuple(data_axes) + (model_axis,))
+        ctx = dataclasses.replace(ctx, decode_seq_axes=seq_axes)
+    with mesh_context(ctx):
+        cache_shape = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    cshard = to_shardings(
+        cache_specs(cfg, shape, mesh, model_axis=model_axis,
+                    data_axes=tuple(data_axes)), mesh)
+    tok_sds = batch_sds["tokens" if cfg.input_mode == "tokens" else "embeds"]
+    n_data = 1
+    for ax in data_axes:
+        n_data *= mesh.shape[ax]
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    da = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    tok_spec = P(da, *([None] * (len(tok_sds.shape) - 1))) \
+        if shape.global_batch >= n_data else P(*([None] * len(tok_sds.shape)))
+    tshard = NamedSharding(mesh, tok_spec)
+
+    def serve_step(params, cache, tokens):
+        return decode_step(cfg, params, cache, tokens)
+
+    args = (pshape, cache_shape, tok_sds)
+    return serve_step, args, (pshard, cshard, tshard), (1,), ctx
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             plan: ExecutionPlan = ExecutionPlan(), out_dir="artifacts/dryrun",
+             tag: str = "", verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(os.path.join(out_dir, mesh_name), exist_ok=True)
+    out_path = os.path.join(
+        out_dir, mesh_name,
+        f"{arch}__{shape_name}{('__' + tag) if tag else ''}.json")
+
+    record: dict = dict(arch=arch, shape=shape_name, mesh=mesh_name,
+                        plan=dataclasses.asdict(plan),
+                        model_params=cfg.param_count(),
+                        active_params=cfg.active_param_count())
+    skip = cell_is_applicable(cfg, shape)
+    if skip:
+        record["status"] = skip
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=2)
+        if verbose:
+            print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: {skip}")
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    data_axes, model_axis = mesh_axes(multi_pod)
+    n_chips = mesh.devices.size
+
+    t0 = time.perf_counter()
+    try:
+        fn, args, in_sh, donate, ctx = build_cell(cfg, shape, mesh,
+                                                  data_axes, model_axis, plan)
+        with mesh_context(ctx):
+            jitted = jax.jit(fn, in_shardings=in_sh,
+                             donate_argnums=donate or None)
+            lowered = jitted.lower(*args)
+            t_lower = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0
+
+        ma = compiled.memory_analysis()
+        print(ma)                      # proves it fits
+        ca = compiled.cost_analysis()
+        print({k: ca[k] for k in ("flops", "bytes accessed")
+               if k in ca})           # FLOPs/bytes for §Roofline
+        hlo = analyze_hlo(compiled.as_text())
+
+        per_dev_bytes = dict(
+            argument=int(ma.argument_size_in_bytes),
+            output=int(ma.output_size_in_bytes),
+            temp=int(ma.temp_size_in_bytes),
+            alias=int(ma.alias_size_in_bytes),
+            code=int(ma.generated_code_size_in_bytes),
+        )
+        resident = (per_dev_bytes["argument"] + per_dev_bytes["temp"]
+                    - per_dev_bytes["alias"])
+        # loop-corrected per-device numbers (analyzer counts per-device HLO)
+        dot_flops_dev = hlo.dot_flops
+        ca_flops_corrected = float(ca.get("flops", 0.0)
+                                   ) * hlo.flops_amplification
+        # HBM traffic proxy: matmul-boundary bytes (lhs+rhs+out per dot).
+        # cost_analysis "bytes accessed" counts every unfused CPU op —
+        # converts alone inflate it ~30× vs what a TPU fusion would touch.
+        bytes_dev = hlo.dot_bytes
+        coll_dev = hlo.total_collective_bytes
+
+        # steps/tokens accounting for MODEL_FLOPS
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                       else 1)
+        n_active = cfg.active_param_count()
+        mult = 6 if shape.kind == "train" else 2
+        model_flops = mult * n_active * tokens
+
+        compute_s = dot_flops_dev / PEAK_FLOPS
+        memory_s = bytes_dev / HBM_BW
+        collective_s = coll_dev / ICI_BW
+        terms = dict(compute_s=compute_s, memory_s=memory_s,
+                     collective_s=collective_s)
+        bottleneck = max(terms, key=terms.get)
+
+        record.update(
+            status="ok",
+            t_lower_s=round(t_lower, 1), t_compile_s=round(t_compile, 1),
+            n_chips=int(n_chips),
+            memory=per_dev_bytes, resident_bytes=int(resident),
+            fits_hbm=bool(resident < 16e9),
+            cost_analysis=dict(flops=float(ca.get("flops", 0.0)),
+                               bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+                               transcendentals=float(ca.get("transcendentals", 0.0))),
+            hlo=hlo.to_json(),
+            per_device=dict(dot_flops=dot_flops_dev,
+                            ca_flops_corrected=ca_flops_corrected,
+                            bytes=bytes_dev, dot_bytes=hlo.dot_bytes,
+                            ca_bytes_corrected=float(
+                                ca.get("bytes accessed", 0.0))
+                            * hlo.bytes_amplification,
+                            collective_bytes=coll_dev),
+            roofline=dict(**terms, bottleneck=bottleneck,
+                          model_flops=model_flops,
+                          hlo_flops_global=dot_flops_dev * n_chips,
+                          useful_flops_ratio=(
+                              model_flops / (dot_flops_dev * n_chips)
+                              if dot_flops_dev else 0.0)),
+        )
+        if verbose:
+            print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: OK "
+                  f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s, "
+                  f"resident {resident/1e9:.2f} GB/dev, "
+                  f"bottleneck {bottleneck})")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        record["status"] = f"FAILED: {type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: FAILED {e}")
+
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ARCH_NAMES)
+    p.add_argument("--shape", choices=list(SHAPES))
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--all", action="store_true",
+                   help="run every (arch × shape) for the selected mesh")
+    p.add_argument("--plan-json", default="",
+                   help='ExecutionPlan overrides, e.g. \'{"fsdp_params":true}\'')
+    p.add_argument("--tag", default="", help="artifact suffix for perf exps")
+    p.add_argument("--out-dir", default="artifacts/dryrun")
+    args = p.parse_args()
+
+    plan = ExecutionPlan(**json.loads(args.plan_json)) if args.plan_json \
+        else ExecutionPlan()
+
+    if args.all:
+        for arch in ARCH_NAMES:
+            for shape_name in SHAPES:
+                run_cell(arch, shape_name, args.multi_pod, plan,
+                         args.out_dir, args.tag)
+        return
+    assert args.arch and args.shape, "--arch/--shape or --all required"
+    run_cell(args.arch, args.shape, args.multi_pod, plan, args.out_dir,
+             args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,227 @@
+"""Loop-aware static analysis of post-optimization HLO text.
+
+``compiled.cost_analysis()`` visits each while-loop body ONCE (measured: a
+scan of 8 layers reports 1/8 of the unrolled FLOPs) and exposes no
+collective statistics. This module parses ``compiled.as_text()`` into
+computations with per-computation symbol tables (operand shapes are not
+inlined in this XLA's text format), walks the call graph from the entry,
+multiplies while bodies by their ``known_trip_count`` annotation (recorded
+for jax.lax.scan), and accumulates:
+
+* ``dot_flops``        — 2·|result|·|contracted| per dot (the MXU term).
+* ``collective_bytes`` — per-device wire bytes per collective kind
+                         (all-reduce counted 2× for the ring reduce+bcast).
+* ``touched_bytes``    — post-fusion boundary bytes (operands+results of
+                         top-level ops) — the HBM-traffic proxy.
+* amplification ratios (with-trips / without-trips) to loop-correct
+  cost_analysis numbers as a cross-check.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloStats"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"[\(,]\s*%?([\w.\-]+)")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_MEM_OPS = {"fusion", "dot", "copy", "dynamic-slice", "dynamic-update-slice",
+            "transpose", "concatenate", "pad", "slice", "reduce", "convert",
+            "broadcast", "reshape", "gather", "scatter", "sort", "iota",
+            "convolution", "reduce-window", "select-and-scatter",
+            "custom-call"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    kind: str
+    result_type: str   # text before the op name (may be a tuple type)
+    rhs: str           # full right-hand side
+
+
+@dataclasses.dataclass
+class HloStats:
+    dot_flops: float
+    dot_bytes: float
+    collective_bytes: Dict[str, float]
+    collective_counts: Dict[str, float]
+    touched_bytes: float
+    flops_amplification: float
+    bytes_amplification: float
+    n_while_loops: int
+    unknown_trip_loops: int
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def to_json(self) -> dict:
+        return dict(dot_flops=self.dot_flops,
+                    dot_bytes=self.dot_bytes,
+                    collective_bytes=dict(self.collective_bytes),
+                    collective_counts=dict(self.collective_counts),
+                    total_collective_bytes=self.total_collective_bytes,
+                    touched_bytes=self.touched_bytes,
+                    flops_amplification=self.flops_amplification,
+                    bytes_amplification=self.bytes_amplification,
+                    n_while_loops=self.n_while_loops,
+                    unknown_trip_loops=self.unknown_trip_loops)
+
+
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_PARAM_RE = re.compile(r"%?([\w.\-]+)\s*:\s*([a-z0-9]+\[[0-9,]*\]|\([^)]*\))")
+
+
+def _split_computations(text: str):
+    comps: Dict[str, List[_Op]] = {}
+    symtab: Dict[str, Dict[str, str]] = {}
+    entry: Optional[str] = None
+    current: Optional[str] = None
+    for line in text.splitlines():
+        hdr = _HDR_RE.match(line)
+        if hdr and "=" not in line.split("(")[0]:
+            current = hdr.group(1)
+            comps[current] = []
+            symtab[current] = {}
+            if line.lstrip().startswith("ENTRY"):
+                entry = current
+            # parameters declared in the header
+            for pname, ptype in _PARAM_RE.findall(line):
+                symtab[current][pname] = ptype
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        d = _DEF_RE.match(line)
+        if not d:
+            continue
+        name, rhs = d.group(1), d.group(2)
+        # op kind: first identifier followed by '(' after the result type
+        km = re.search(r"\}?\s([a-z][a-z0-9\-]*)\(", " " + rhs)
+        kind = km.group(1) if km else ""
+        result_type = rhs.split(kind + "(")[0] if kind else rhs
+        symtab[current][name] = result_type
+        comps[current].append(_Op(name, kind, result_type, rhs))
+    return comps, symtab, entry
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps, symtab, entry = _split_computations(text)
+    if entry is None:
+        # fallback: last computation
+        entry = list(comps)[-1]
+
+    stats = dict(dot=0.0, touched=0.0, dot_bytes=0.0)
+    noloop = dict(dot=0.0, touched=0.0)
+    coll_bytes: Dict[str, float] = defaultdict(float)
+    coll_counts: Dict[str, float] = defaultdict(float)
+    counters = dict(n_while=0, unknown=0)
+
+    def operand_names(rhs: str, kind: str) -> List[str]:
+        inner = rhs.split(kind + "(", 1)[1] if kind + "(" in rhs else ""
+        # cut at the closing paren of the operand list (operands hold no parens)
+        inner = inner.split(")")[0]
+        return [m.group(1) for m in _OPERAND_RE.finditer("(" + inner)]
+
+    def walk(comp: str, mult: float, depth: int):
+        if comp not in comps or depth > 64:
+            return
+        table = symtab[comp]
+        for op in comps[comp]:
+            if op.kind == "while":
+                counters["n_while"] += 1
+                t = _TRIP_RE.search(op.rhs)
+                trips = float(t.group(1)) if t else 1.0
+                if not t:
+                    counters["unknown"] += 1
+                bm = re.search(r"body=%?([\w.\-]+)", op.rhs)
+                if bm:
+                    walk(bm.group(1), mult * trips, depth + 1)
+                continue
+            if op.kind in ("call", "conditional"):
+                for cm in re.finditer(
+                        r"(?:to_apply|branch_computations=\{|calls=)"
+                        r"%?([\w.\-]+)", op.rhs):
+                    walk(cm.group(1), mult, depth + 1)
+            if op.kind == "dot":
+                rdims = _first_dims(op.result_type)
+                rn = 1
+                for d in rdims:
+                    rn *= d
+                contract = 1
+                ops_ = operand_names(op.rhs, "dot")
+                cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rhs)
+                if ops_ and cdims and cdims.group(1):
+                    ldims = _first_dims(table.get(ops_[0], ""))
+                    for ci in cdims.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(ldims):
+                            contract *= ldims[ci]
+                f = 2.0 * rn * contract
+                stats["dot"] += mult * f
+                noloop["dot"] += f
+                # matmul-boundary HBM traffic: lhs + rhs + result bytes
+                # (the fusion-safe floor of true traffic — see §Roofline)
+                db = _shape_bytes(op.result_type)
+                for oname in ops_:
+                    db += _shape_bytes(table.get(oname, ""))
+                stats["dot_bytes"] += mult * db
+            if op.kind in _COLLECTIVES:
+                b = _shape_bytes(op.result_type)
+                if op.kind == "reduce-scatter":
+                    ops_ = operand_names(op.rhs, op.kind)
+                    if ops_:
+                        b = _shape_bytes(table.get(ops_[0], op.result_type))
+                factor = 2.0 if op.kind == "all-reduce" else 1.0
+                coll_bytes[op.kind] += mult * factor * b
+                coll_counts[op.kind] += mult
+            if op.kind in _MEM_OPS:
+                b = _shape_bytes(op.result_type)
+                for oname in operand_names(op.rhs, op.kind):
+                    b += _shape_bytes(table.get(oname, ""))
+                stats["touched"] += mult * b
+                noloop["touched"] += b
+
+    walk(entry, 1.0, 0)
+    flops_amp = stats["dot"] / noloop["dot"] if noloop["dot"] else 1.0
+    bytes_amp = (stats["touched"] / noloop["touched"]
+                 if noloop["touched"] else 1.0)
+    return HloStats(stats["dot"], stats["dot_bytes"], dict(coll_bytes),
+                    dict(coll_counts), stats["touched"], flops_amp,
+                    bytes_amp, counters["n_while"], counters["unknown"])

@@ -1,0 +1,75 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --shape train_4k --steps 200 [--smoke] [--devices N] [--fsdp] \
+        [--grad-compression] [--ckpt-dir DIR]
+
+``--devices N`` requests N host platform devices (set before jax init) and
+builds an N-device (data, model) mesh; with the default 1 there is no mesh
+and the single-device path runs. ``--smoke`` swaps in the reduced config and
+a small shape so the driver runs end-to-end on a laptop CPU.
+"""
+import argparse
+import os
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="llama3.2-1b")
+    p.add_argument("--shape", default="train_4k")
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--devices", type=int, default=1)
+    p.add_argument("--data-par", type=int, default=0,
+                   help="data axis size (default devices//model_par)")
+    p.add_argument("--model-par", type=int, default=1)
+    p.add_argument("--fsdp", action="store_true")
+    p.add_argument("--grad-compression", action="store_true")
+    p.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--seq-len", type=int, default=0)
+    p.add_argument("--batch", type=int, default=0)
+    args = p.parse_args()
+
+    if args.devices > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import jax  # noqa: E402 — after XLA_FLAGS
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.distributed.sharding import ExecutionPlan
+    from repro.models.config import SHAPES, ShapeSpec
+    from repro.train import Trainer, TrainerConfig
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    if args.smoke:
+        shape = ShapeSpec("smoke_train", args.seq_len or 128,
+                          args.batch or 8, "train")
+    else:
+        base = SHAPES[args.shape]
+        shape = ShapeSpec(base.name, args.seq_len or base.seq_len,
+                          args.batch or base.global_batch, base.kind)
+
+    mesh = None
+    data_axes = ("data",)
+    if args.devices > 1:
+        mp = args.model_par
+        dp = args.data_par or args.devices // mp
+        assert dp * mp == args.devices, "data_par × model_par must = devices"
+        mesh = jax.make_mesh((dp, mp), ("data", "model"))
+
+    plan = ExecutionPlan(fsdp_params=args.fsdp,
+                         grad_compression=args.grad_compression)
+    tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                         total_steps=args.steps,
+                         warmup_steps=max(args.steps // 20, 5))
+    trainer = Trainer(cfg, shape, tcfg, mesh=mesh, plan=plan,
+                      data_axes=data_axes)
+    trainer.run_with_restart(args.steps)
+    print("[train] done")
+
+
+if __name__ == "__main__":
+    main()

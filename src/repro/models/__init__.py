@@ -1,0 +1,8 @@
+"""LM substrate: config-driven decoder stacks (dense / MoE / SSM / xLSTM /
+hybrid) with train, prefill and decode paths."""
+from .config import SHAPES, ModelConfig, ShapeSpec
+from .transformer import (decode_step, init_cache, init_params, loss_fn,
+                          prefill)
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeSpec", "decode_step", "init_cache",
+           "init_params", "loss_fn", "prefill"]

@@ -1,0 +1,263 @@
+"""Core transformer layers in pure JAX: RMSNorm, RoPE / M-RoPE, GQA
+attention (einsum path for short contexts, chunked online-softmax path for
+long), SwiGLU MLP.
+
+The chunked attention (`flash_attention_xla`) is the XLA twin of the Pallas
+kernel in `repro.kernels.flash_attention`: a python loop over q chunks (the
+per-chunk KV extent is then *static*, so causal FLOPs are exact, not
+masked-away) with a lax.scan over kv chunks carrying online-softmax stats.
+It lowers on any backend — the Pallas kernel replaces it on real TPU via
+``attn_impl='pallas'``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "rope_cos_sin", "apply_rope", "mrope_cos_sin",
+           "gqa_attention", "flash_attention_xla", "swiglu_mlp",
+           "init_dense", "init_norm"]
+
+
+def init_dense(key, shape, scale: Optional[float] = None, dtype=jnp.bfloat16):
+    fan_in = shape[0]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def init_norm(shape, dtype=jnp.bfloat16):
+    return jnp.ones(shape, dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """positions: (..., S) int → cos/sin (..., S, head_dim/2) f32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions3: jax.Array, head_dim: int, theta: float,
+                  sections: Tuple[int, int, int]
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Qwen2-VL multimodal RoPE. positions3: (3, B, S) — temporal/height/
+    width position ids (the vision frontend stub supplies them; for text
+    all three are equal and this reduces to standard RoPE).
+
+    Each of the head_dim/2 rotary frequencies is driven by one of the three
+    position streams according to `sections` (must sum to head_dim/2).
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    cos, sin = rope_cos_sin(positions3, head_dim, theta)  # (3, B, S, half)
+    parts_c, parts_s = [], []
+    off = 0
+    for axis, sec in enumerate(sections):
+        parts_c.append(cos[axis, ..., off:off + sec])
+        parts_s.append(sin[axis, ..., off:off + sec])
+        off += sec
+    return jnp.concatenate(parts_c, -1), jnp.concatenate(parts_s, -1)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, H, S, D); cos/sin: (B, S, D/2) — rotate-half convention."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    c = cos[:, None].astype(jnp.float32)
+    s = sin[:, None].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _plain_attention(q, k, v, causal: bool, kv_valid_len=None):
+    """Einsum attention; fine for short sequences. q:(B,H,S,D) k/v:(B,H,T,D)."""
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+    if causal and s > 1:
+        mask = jnp.arange(s)[:, None] >= jnp.arange(t)[None, :] - (t - s)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    if kv_valid_len is not None:
+        valid = jnp.arange(t)[None, None, None, :] < kv_valid_len
+        scores = jnp.where(valid, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p.astype(v.dtype), v)
+
+
+def flash_attention_xla(q, k, v, *, causal: bool, q_chunk: int = 1024,
+                        kv_chunk: int = 1024, kv_valid_len=None):
+    """Chunked online-softmax attention in pure XLA ops.
+
+    Python loop over q chunks (static per-chunk kv extent → causal work is
+    truly skipped, not masked) with a lax.scan over kv chunks carrying
+    (m, l, acc) — memory O(q_chunk × kv_chunk) instead of O(S²).
+    """
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    scale = d ** -0.5
+    nq = -(-s // q_chunk)
+    outs = []
+    for qi in range(nq):
+        q0 = qi * q_chunk
+        qlen = min(q_chunk, s - q0)
+        qc = jax.lax.dynamic_slice_in_dim(q, q0, qlen, axis=2)
+        # causal: this q chunk sees keys < kv_end (static!)
+        kv_end = min(t, (t - s) + q0 + qlen) if causal else t
+        nkv = -(-kv_end // kv_chunk)
+        kv_pad = nkv * kv_chunk
+        kc = jnp.pad(k[:, :, :kv_end], ((0, 0), (0, 0), (0, kv_pad - kv_end), (0, 0)))
+        vc = jnp.pad(v[:, :, :kv_end], ((0, 0), (0, 0), (0, kv_pad - kv_end), (0, 0)))
+        kc = kc.reshape(b, h, nkv, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+        vc = vc.reshape(b, h, nkv, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+
+        def step(carry, blk):
+            m, l, acc = carry
+            kb, vb, ki = blk
+            sc = jnp.einsum("bhsd,bhtd->bhst", qc, kb,
+                            preferred_element_type=jnp.float32) * scale
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = kpos[None, None, None, :] < kv_end
+            if kv_valid_len is not None:
+                mask = mask & (kpos[None, None, None, :] < kv_valid_len)
+            if causal:
+                qpos = (t - s) + q0 + jnp.arange(qlen)
+                mask = mask & (qpos[None, None, :, None] >= kpos[None, None, None, :])
+            sc = jnp.where(mask, sc, -1e30)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhst,bhtd->bhsd", p.astype(vb.dtype), vb).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, qlen), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, h, qlen), jnp.float32)
+        a0 = jnp.zeros((b, h, qlen, d), jnp.float32)
+        # checkpoint each kv step: without this the scan stacks the
+        # (q_chunk × kv_chunk) probability blocks for backward — O(S²) memory,
+        # exactly what flash attention exists to avoid.
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(step), (m0, l0, a0), (kc, vc, jnp.arange(nkv)))
+        outs.append((acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype))
+    return jnp.concatenate(outs, axis=2)
+
+
+def sharded_decode_attention(q, ck, cv, k_new, v_new, pos, *, mesh,
+                             seq_axes, rep: int):
+    """Flash-decode over a sequence-sharded KV cache, plus the owner-local
+    cache append — all inside one shard_map, so the cache is NEVER gathered.
+
+    q: (B, Hq, 1, hd); ck/cv: (B, Hkv, S, hd) with S sharded over
+    `seq_axes`; k_new/v_new: (B, Hkv, 1, hd) replicated; pos: scalar.
+    Each shard computes masked partial (max, sum, weighted-V) statistics for
+    its cache slice; a pmax/psum pair combines them (wire: O(B·Hq·hd), vs
+    gathering the multi-GB cache). The shard owning index `pos` writes the
+    new k/v in place.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    axes = seq_axes if isinstance(seq_axes, tuple) else (seq_axes,)
+
+    def local(q, ck, cv, kn, vn, pos):
+        b, hkv, s_loc, hd = ck.shape
+        shard = jnp.int32(0)  # row-major over the (possibly tuple) axes
+        for ax in axes:
+            shard = shard * mesh.shape[ax] + jax.lax.axis_index(ax)
+        start = shard * s_loc
+        # owner-local append
+        lpos = pos - start
+        owner = (lpos >= 0) & (lpos < s_loc)
+        lpos_c = jnp.clip(lpos, 0, s_loc - 1)
+        ck_up = jax.lax.dynamic_update_slice_in_dim(
+            ck, kn.astype(ck.dtype), lpos_c, axis=2)
+        cv_up = jax.lax.dynamic_update_slice_in_dim(
+            cv, vn.astype(cv.dtype), lpos_c, axis=2)
+        ck = jnp.where(owner, ck_up, ck)
+        cv = jnp.where(owner, cv_up, cv)
+        # local masked flash-decode partials
+        hq = q.shape[1]
+        qg = q.reshape(b, hkv, rep, hd).astype(jnp.float32)
+        scores = jnp.einsum("bhrd,bhsd->bhrs", qg,
+                            ck.astype(jnp.float32)) * (hd ** -0.5)
+        kpos = start + jnp.arange(s_loc)
+        valid = kpos[None, None, None, :] <= pos
+        scores = jnp.where(valid, scores, -1e30)
+        m = scores.max(axis=-1)                          # (b,hkv,rep)
+        p = jnp.exp(scores - m[..., None])
+        p = jnp.where(valid, p, 0.0)
+        l = p.sum(axis=-1)
+        o = jnp.einsum("bhrs,bhsd->bhrd", p, cv.astype(jnp.float32))
+        # combine across shards (tiny wire)
+        m_g = jax.lax.pmax(m, axes)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, axes)
+        o_g = jax.lax.psum(o * corr[..., None], axes)
+        out = (o_g / jnp.maximum(l_g, 1e-30)[..., None])
+        return out.reshape(b, hq, 1, hd).astype(q.dtype), ck, cv
+
+    cache_spec = P(None, None, seq_axes, None)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), cache_spec, cache_spec, P(), P(), P()),
+        out_specs=(P(), cache_spec, cache_spec), check_vma=False,
+    )(q, ck, cv, k_new, v_new, pos)
+
+
+def gqa_attention(q, k, v, *, causal: bool, q_chunk: int, kv_chunk: int,
+                  kv_valid_len=None, impl: str = "auto"):
+    """Grouped-query attention dispatcher. q: (B, Hq, S, D), k/v: (B, Hkv, T, D).
+
+    KV heads are broadcast to Q head groups without materializing the repeat
+    (einsum over the group axis).
+    """
+    b, hq, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    if rep > 1:
+        q = q.reshape(b, hkv, rep, s, d).reshape(b * hkv, rep, s, d)
+        k = k.reshape(b * hkv, 1, t, d)
+        v = v.reshape(b * hkv, 1, t, d)
+        k = jnp.broadcast_to(k, (b * hkv, rep, t, d))
+        v = jnp.broadcast_to(v, (b * hkv, rep, t, d))
+    use_chunked = (impl == "chunked") or (impl == "auto" and max(s, t) > 2048)
+    fn = (functools.partial(flash_attention_xla, q_chunk=q_chunk,
+                            kv_chunk=kv_chunk)
+          if use_chunked else _plain_attention)
+    out = fn(q, k, v, causal=causal, kv_valid_len=kv_valid_len)
+    if rep > 1:
+        out = out.reshape(b, hkv, rep, s, d).reshape(b, hq, s, d)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def swiglu_mlp(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array
+               ) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, wg)
+    u = jnp.einsum("...d,df->...f", x, wu)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g.astype(jnp.float32)
+                                                   ).astype(x.dtype) * u, wd)

@@ -1,0 +1,158 @@
+"""Mamba selective-SSM block (Jamba's 'm' mixer).
+
+Train/prefill path: chunkwise parallel scan — within a chunk the recurrence
+h_t = Ābar_t·h_{t-1} + B̄x_t is evaluated with an associative scan (stable:
+log Ābar = Δ·A ≤ 0, no divisions), chunks are chained with a lax.scan carrying
+the (B, d_inner, N) state. This bounds the materialized state history to one
+chunk (the memory trick the CUDA kernel implements on GPU; on TPU the chunked
+associative scan is the natural equivalent).
+
+Decode path: single-step recurrence + rolling conv window, O(1) per token —
+what makes jamba's long_500k shape linear.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_dense
+
+__all__ = ["init_mamba_params", "mamba_forward", "mamba_decode_step",
+           "init_mamba_state"]
+
+
+def init_mamba_params(key, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
+    d, di, n, r, dc = (cfg.d_model, cfg.d_inner, cfg.ssm_state_dim,
+                       cfg.dt_rank, cfg.ssm_conv_dim)
+    ks = jax.random.split(key, 6)
+    a_init = jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                      (di, n)))
+    return dict(
+        in_proj=init_dense(ks[0], (d, 2 * di), dtype=dtype),
+        conv_w=(jax.random.normal(ks[1], (dc, di), jnp.float32) * 0.2
+                ).astype(dtype),
+        conv_b=jnp.zeros((di,), dtype),
+        x_proj=init_dense(ks[2], (di, r + 2 * n), dtype=dtype),
+        dt_proj=init_dense(ks[3], (r, di), scale=r ** -0.5, dtype=dtype),
+        dt_bias=jnp.log(jnp.expm1(jnp.full((di,), 0.01, jnp.float32))
+                        ).astype(jnp.float32),
+        a_log=a_init,                     # (di, N) fp32
+        d_skip=jnp.ones((di,), jnp.float32),
+        out_proj=init_dense(ks[4], (di, d), dtype=dtype),
+    )
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. x: (B, S, di); w: (dc, di)."""
+    dc = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    s = x.shape[1]
+    for j in range(dc):
+        out = out + pad[:, j : j + s].astype(jnp.float32) * w[j].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_chunk(h0, dt, b_in, c_in, xc, a):
+    """One chunk of the selective scan.
+
+    h0: (B, di, N) carry; dt: (B, c, di); b_in/c_in: (B, c, N); xc: (B, c, di);
+    a: (di, N). Returns (y (B, c, di), h_end).
+    """
+    log_abar = dt[..., None] * a[None, None]                   # (B,c,di,N) ≤ 0
+    bx = (dt * xc)[..., None] * b_in[:, :, None, :]            # (B,c,di,N)
+
+    def combine(e1, e2):
+        l1, s1 = e1
+        l2, s2 = e2
+        return l1 + l2, s1 * jnp.exp(l2) + s2
+
+    logs, acc = jax.lax.associative_scan(combine, (log_abar, bx), axis=1)
+    h = acc + jnp.exp(logs) * h0[:, None]                      # (B,c,di,N)
+    y = jnp.einsum("bcdn,bcn->bcd", h, c_in)
+    return y, h[:, -1]
+
+
+def mamba_forward(params: Dict[str, jax.Array], x: jax.Array,
+                  cfg: ModelConfig, chunk: int = 256,
+                  return_state: bool = False):
+    """x: (B, S, D) → (B, S, D) [, decode state at the final position]."""
+    b, s, d = x.shape
+    di, n, r = cfg.d_inner, cfg.ssm_state_dim, cfg.dt_rank
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(x_in, params["conv_w"], params["conv_b"]
+                                  ).astype(jnp.float32)).astype(x.dtype)
+    proj = jnp.einsum("bsd,de->bse", xc, params["x_proj"]).astype(jnp.float32)
+    dt_r, b_in, c_in = proj[..., :r], proj[..., r:r + n], proj[..., r + n:]
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"].astype(jnp.float32)
+                         + params["dt_bias"])                  # (B,S,di) f32
+    a = -jnp.exp(params["a_log"])                              # (di, N)
+
+    c = min(chunk, s)
+    if s % c:  # pad time to a chunk multiple
+        pad = c - s % c
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+        xcp = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xcp = xc
+    nch = xcp.shape[1] // c
+    resh = lambda t: t.reshape(b, nch, c, *t.shape[2:]).swapaxes(0, 1)  # noqa: E731
+
+    def step(h, inputs):
+        dt_c, b_c, c_c, x_c = inputs
+        y, h_new = _ssm_chunk(h, dt_c, b_c, c_c, x_c.astype(jnp.float32), a)
+        return h_new, y
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    h_end, ys = jax.lax.scan(step, h0,
+                             (resh(dt), resh(b_in), resh(c_in), resh(xcp)))
+    y = ys.swapaxes(0, 1).reshape(b, nch * c, di)[:, :s]
+    y = y + xc.astype(jnp.float32) * params["d_skip"]
+    out = (y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    out = jnp.einsum("bsd,de->bse", out, params["out_proj"])
+    if return_state:
+        # NOTE: h_end includes padded (dt=0 → Ābar=1, B̄x=0) steps: identity
+        # updates, so the state at s is exact.
+        dc = cfg.ssm_conv_dim
+        conv_win = jnp.pad(x_in, ((0, 0), (max(dc - 1 - s, 0), 0), (0, 0))
+                           )[:, -(dc - 1):]
+        return out, dict(conv=conv_win.astype(x.dtype), ssm=h_end)
+    return out
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    return dict(
+        conv=jnp.zeros((batch, cfg.ssm_conv_dim - 1, cfg.d_inner), dtype),
+        ssm=jnp.zeros((batch, cfg.d_inner, cfg.ssm_state_dim), jnp.float32),
+    )
+
+
+def mamba_decode_step(params, state, x, cfg: ModelConfig):
+    """x: (B, 1, D) → (y (B, 1, D), new state). O(1) in context length."""
+    b = x.shape[0]
+    di, n, r, dc = cfg.d_inner, cfg.ssm_state_dim, cfg.dt_rank, cfg.ssm_conv_dim
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)                        # (B,1,di)
+    window = jnp.concatenate([state["conv"], x_in], axis=1)    # (B,dc,di)
+    conv = (window.astype(jnp.float32) * params["conv_w"][None].astype(jnp.float32)
+            ).sum(axis=1) + params["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(conv).astype(x.dtype)                     # (B,di)
+    proj = (xc @ params["x_proj"]).astype(jnp.float32)
+    dt_r, b_in, c_in = proj[:, :r], proj[:, r:r + n], proj[:, r + n:]
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"].astype(jnp.float32)
+                         + params["dt_bias"])                  # (B,di)
+    a = -jnp.exp(params["a_log"])
+    abar = jnp.exp(dt[..., None] * a[None])                    # (B,di,N)
+    h = state["ssm"] * abar + (dt * xc.astype(jnp.float32))[..., None] \
+        * b_in[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_in) + xc.astype(jnp.float32) * params["d_skip"]
+    out = (y.astype(x.dtype) * jax.nn.silu(z[:, 0].astype(jnp.float32)
+                                           ).astype(x.dtype))
+    y_out = (out @ params["out_proj"])[:, None]
+    return y_out, dict(conv=window[:, 1:], ssm=h)

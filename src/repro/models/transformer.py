@@ -1,0 +1,449 @@
+"""Config-driven decoder stack: parameter init, train forward + loss,
+prefill, and single-token decode with KV/state caches.
+
+Layers are applied as a ``lax.scan`` over *groups* of ``pattern_period``
+layers (identical structure per group), keeping the lowered HLO size
+constant in depth — at 48 layers this is the difference between a 30 s and a
+10 min 512-way GSPMD compile. Each group is optionally wrapped in
+``jax.checkpoint`` (remat).
+
+Caches: every slot (layer within a group) owns its state —
+  'a' → k/v ring buffers (B, Hkv, S_max, hd) + the shared scalar `pos`;
+  'm' → Mamba conv window + SSM state;
+  'M'/'s' → xLSTM matrix / scalar states.
+Stacked across groups by scan, so cache pytrees mirror the param layout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (apply_rope, gqa_attention, init_dense,
+                                 init_norm, mrope_cos_sin, rms_norm,
+                                 rope_cos_sin, swiglu_mlp)
+from repro.models.moe import init_moe_params, moe_ffn
+from repro.models.ssm import (init_mamba_params, init_mamba_state,
+                              mamba_decode_step, mamba_forward)
+from repro.models.xlstm import (init_mlstm_params, init_mlstm_state,
+                                init_slstm_params, init_slstm_state,
+                                mlstm_decode_step, mlstm_forward,
+                                slstm_decode_step, slstm_forward)
+
+__all__ = ["init_params", "loss_fn", "prefill", "decode_step", "init_cache",
+           "model_dtype"]
+
+MOE_AUX_COEF = 0.01
+
+
+def model_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _init_attn_slot(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.head_dim_
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = dict(
+        wq=init_dense(ks[0], (d, hq * hd), dtype=dtype),
+        wk=init_dense(ks[1], (d, hkv * hd), dtype=dtype),
+        wv=init_dense(ks[2], (d, hkv * hd), dtype=dtype),
+        wo=init_dense(ks[3], (hq * hd, d), dtype=dtype),
+    )
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm((hd,), dtype)
+        p["k_norm"] = init_norm((hd,), dtype)
+    return p
+
+
+def _init_mlp_slot(key, cfg: ModelConfig, layer_idx: int, dtype
+                   ) -> Optional[Dict[str, Any]]:
+    if cfg.d_ff == 0 and not cfg.layer_is_moe(layer_idx):
+        return None
+    if cfg.layer_is_moe(layer_idx):
+        return dict(kind="moe", **init_moe_params(key, cfg, dtype))
+    k1, k2, k3 = jax.random.split(key, 3)
+    if not cfg.mlp_gated:
+        return dict(kind="dense",
+                    wi=init_dense(k1, (cfg.d_model, cfg.d_ff), dtype=dtype),
+                    wd=init_dense(k3, (cfg.d_ff, cfg.d_model), dtype=dtype))
+    return dict(kind="dense",
+                wg=init_dense(k1, (cfg.d_model, cfg.d_ff), dtype=dtype),
+                wu=init_dense(k2, (cfg.d_model, cfg.d_ff), dtype=dtype),
+                wd=init_dense(k3, (cfg.d_ff, cfg.d_model), dtype=dtype))
+
+
+def _init_group(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    """Params for one group (pattern_period layers). `kind` markers are
+    static strings stripped before jitting (see _split_static)."""
+    slots = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        slot: Dict[str, Any] = dict(kind=kind, norm1=init_norm((cfg.d_model,), dtype))
+        if kind == "a":
+            slot["attn"] = _init_attn_slot(k1, cfg, dtype)
+        elif kind == "m":
+            slot["mamba"] = init_mamba_params(k1, cfg, dtype)
+        elif kind == "M":
+            slot["mlstm"] = init_mlstm_params(k1, cfg, dtype)
+        elif kind == "s":
+            slot["slstm"] = init_slstm_params(k1, cfg, dtype)
+        if kind in ("a", "m"):
+            mlp = _init_mlp_slot(k2, cfg, j, dtype)
+            if mlp is not None:
+                slot["norm2"] = init_norm((cfg.d_model,), dtype)
+                slot["mlp"] = mlp
+        slots[f"s{j}"] = slot
+    return slots
+
+
+def _strip_static(tree):
+    """Remove the static 'kind' strings (they're re-derived from cfg)."""
+    if isinstance(tree, dict):
+        return {k: _strip_static(v) for k, v in tree.items() if k != "kind"}
+    return tree
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    dtype = model_dtype(cfg)
+    k_embed, k_groups, k_head = jax.random.split(key, 3)
+    params: Dict[str, Any] = {}
+    if cfg.input_mode == "tokens" or cfg.tie_embeddings:
+        params["embed"] = init_dense(k_embed, (cfg.vocab_size, cfg.d_model),
+                                     scale=0.02, dtype=dtype)
+    # stacked groups: init one group per key, stack leaves
+    gkeys = jax.random.split(k_groups, cfg.num_groups)
+    groups = [_strip_static(_init_group(k, cfg, dtype)) for k in gkeys]
+    params["groups"] = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *groups)
+    params["final_norm"] = init_norm((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(k_head, (cfg.d_model, cfg.vocab_size),
+                                       dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _attn_apply(slot, x, cos, sin, cfg: ModelConfig, *, causal=True,
+                cache=None, pos=None):
+    """x: (B, S, D). If `cache` is given, append k/v at `pos` and attend over
+    the whole (masked) buffer. Returns (out, new_cache)."""
+    from repro.distributed.meshctx import get_mesh_context
+    b, s, d = x.shape
+    hd, hq, hkv = cfg.head_dim_, cfg.num_heads, cfg.num_kv_heads
+    h = rms_norm(x, slot["norm1"], cfg.norm_eps)
+    # DP-only attention (heads don't tile the model axis): spread the batch
+    # over data+model so the model axis isn't idle during attention.
+    ctx = get_mesh_context()
+    reshard = None
+    if (ctx.mesh is not None and ctx.attn_dp_axes is not None
+            and cache is None):
+        n_all = 1
+        for ax in ctx.attn_dp_axes:
+            n_all *= ctx.mesh.shape[ax]
+        if b % n_all == 0:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            reshard = NamedSharding(ctx.mesh, P(ctx.attn_dp_axes, None, None))
+            h = jax.lax.with_sharding_constraint(h, reshard)
+    q = jnp.einsum("bsd,de->bse", h, slot["attn"]["wq"]).reshape(b, s, hq, hd)
+    k = jnp.einsum("bsd,de->bse", h, slot["attn"]["wk"]).reshape(b, s, hkv, hd)
+    v = jnp.einsum("bsd,de->bse", h, slot["attn"]["wv"]).reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, slot["attn"]["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, slot["attn"]["k_norm"], cfg.norm_eps)
+    q, k = q.swapaxes(1, 2), k.swapaxes(1, 2)  # (B, H, S, hd)
+    v = v.swapaxes(1, 2)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    new_cache = None
+    if cache is not None:
+        if s == 1 and ctx.mesh is not None and ctx.decode_seq_axes:
+            # sequence-sharded cache: shard_map flash-decode (never gathers
+            # the cache; wire cost is O(B·H·hd) partial-softmax stats)
+            from repro.models.layers import sharded_decode_attention
+            att, ck, cv = sharded_decode_attention(
+                q, cache["k"], cache["v"], k, v, pos, mesh=ctx.mesh,
+                seq_axes=ctx.decode_seq_axes, rep=hq // hkv)
+            return (x + jnp.einsum(
+                "bse,ed->bsd", att.swapaxes(1, 2).reshape(b, s, hq * hd),
+                slot["attn"]["wo"]), dict(k=ck, v=cv))
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+            cache["k"].dtype), pos, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+            cache["v"].dtype), pos, axis=2)
+        new_cache = dict(k=ck, v=cv)
+        if s == 1:
+            # decode: read the whole (masked) buffer — the HBM-bound path
+            att = gqa_attention(q, ck, cv, causal=False,
+                                q_chunk=cfg.attn_q_chunk,
+                                kv_chunk=cfg.attn_kv_chunk,
+                                kv_valid_len=pos + s, impl="plain")
+        else:
+            # prefill: attend causally over the fresh k/v, not the buffer
+            att = gqa_attention(q, k, v, causal=True,
+                                q_chunk=cfg.attn_q_chunk,
+                                kv_chunk=cfg.attn_kv_chunk)
+    else:
+        att = gqa_attention(q, k, v, causal=causal, q_chunk=cfg.attn_q_chunk,
+                            kv_chunk=cfg.attn_kv_chunk)
+    att = att.swapaxes(1, 2).reshape(b, s, hq * hd)
+    out = jnp.einsum("bse,ed->bsd", att, slot["attn"]["wo"])
+    if reshard is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        out = jax.lax.with_sharding_constraint(
+            out, NamedSharding(ctx.mesh, P(ctx.data_axes, None, None)))
+    return x + out, new_cache
+
+
+def _mlp_apply(slot, x, cfg: ModelConfig, layer_idx: int):
+    """Post-mixer MLP (dense or MoE). Returns (x, aux)."""
+    if "mlp" not in slot:
+        return x, jnp.float32(0.0)
+    h = rms_norm(x, slot["norm2"], cfg.norm_eps)
+    if cfg.layer_is_moe(layer_idx):
+        y, aux = moe_ffn(slot["mlp"], h, cfg)
+    elif cfg.mlp_gated:
+        y = swiglu_mlp(h, slot["mlp"]["wg"], slot["mlp"]["wu"],
+                       slot["mlp"]["wd"])
+        aux = jnp.float32(0.0)
+    else:
+        u = jnp.einsum("...d,df->...f", h, slot["mlp"]["wi"])
+        u = jax.nn.gelu(u.astype(jnp.float32)).astype(h.dtype)
+        y = jnp.einsum("...f,fd->...d", u, slot["mlp"]["wd"])
+        aux = jnp.float32(0.0)
+    return x + y, aux
+
+
+def _apply_group_train(gparams, x, cos, sin, cfg: ModelConfig):
+    aux_total = jnp.float32(0.0)
+    for j, kind in enumerate(cfg.block_pattern):
+        slot = gparams[f"s{j}"]
+        if kind == "a":
+            x, _ = _attn_apply(slot, x, cos, sin, cfg)
+        elif kind == "m":
+            h = rms_norm(x, slot["norm1"], cfg.norm_eps)
+            x = x + mamba_forward(slot["mamba"], h, cfg)
+        elif kind == "M":
+            h = rms_norm(x, slot["norm1"], cfg.norm_eps)
+            x = x + mlstm_forward(slot["mlstm"], h, cfg)
+        elif kind == "s":
+            h = rms_norm(x, slot["norm1"], cfg.norm_eps)
+            x = x + slstm_forward(slot["slstm"], h, cfg)
+        if kind in ("a", "m"):
+            x, aux = _mlp_apply(slot, x, cfg, j)
+            aux_total = aux_total + aux
+    return x, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding / rope helpers
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, batch):
+    if cfg.input_mode == "tokens":
+        return jnp.take(params["embed"], batch["tokens"], axis=0)
+    return batch["embeds"].astype(model_dtype(cfg))
+
+
+def _rope_tables(cfg, positions, batch):
+    if not any(k == "a" for k in cfg.block_pattern):
+        return None, None
+    if cfg.mrope:
+        pos3 = batch.get("positions3")
+        if pos3 is None:
+            pos3 = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return mrope_cos_sin(pos3, cfg.head_dim_, cfg.rope_theta,
+                             cfg.mrope_sections)
+    return rope_cos_sin(positions, cfg.head_dim_, cfg.rope_theta)
+
+
+def _unembed(cfg, params, x):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def _forward(cfg: ModelConfig, params, batch):
+    from repro.distributed.meshctx import get_mesh_context
+    x = _embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    cos, sin = _rope_tables(cfg, positions, batch)
+
+    ctx = get_mesh_context()
+    ckpt_constraint = None
+    if (ctx.mesh is not None and ctx.shard_activation_ckpt
+            and s % ctx.mesh.shape[ctx.model_axis] == 0):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        ckpt_constraint = NamedSharding(
+            ctx.mesh, P(ctx.batch_spec_axes, ctx.model_axis, None))
+
+    def group_fn(carry, gparams):
+        x, aux = carry
+        if ckpt_constraint is not None:
+            # the scan saves this carry per group for backward; sequence-
+            # sharding it cuts residency |model|× (one AG per group to use)
+            x = jax.lax.with_sharding_constraint(x, ckpt_constraint)
+        x, aux_g = _apply_group_train(gparams, x, cos, sin, cfg)
+        return (x, aux + aux_g), None
+
+    if cfg.remat == "layer":
+        group_fn = jax.checkpoint(group_fn)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(group_fn, (x, jnp.float32(0.0)),
+                                   params["groups"])
+    else:
+        carry = (x, jnp.float32(0.0))
+        for g in range(cfg.num_groups):
+            gp = jax.tree_util.tree_map(lambda t: t[g], params["groups"])
+            carry, _ = group_fn(carry, gp)
+        x, aux = carry
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, Dict]:
+    """Next-token cross entropy (+ MoE aux). batch: tokens/embeds + labels.
+
+    The CE is computed in checkpointed chunks along the sequence so the
+    (B, S, V) fp32 logits are never materialized — per chunk only
+    (B, chunk, V) exists, recomputed in backward. At vocab 128k and 65k
+    tokens/device the full tensor would be >2 GB × several live copies.
+    """
+    x, aux = _forward(cfg, params, batch)
+    labels = batch["labels"]
+    b, s, _ = x.shape
+    n_chunks = 8 if (s % 8 == 0 and s >= 1024) else 1
+
+    def chunk_ce(acc, xs):
+        xc, lc = xs
+        logits = _unembed(cfg, params, xc).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return acc + (logz - gold).sum(), None
+
+    if n_chunks == 1:
+        total, _ = chunk_ce(jnp.float32(0.0), (x, labels))
+    else:
+        c = s // n_chunks
+        xs = (x.reshape(b, n_chunks, c, -1).swapaxes(0, 1),
+              labels.reshape(b, n_chunks, c).swapaxes(0, 1))
+        total, _ = jax.lax.scan(jax.checkpoint(chunk_ce), jnp.float32(0.0), xs)
+    ce = total / (b * s)
+    loss = ce + MOE_AUX_COEF * aux
+    return loss, dict(ce=ce, aux=aux)
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init, prefill, decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    dtype = model_dtype(cfg)
+    hd, hkv = cfg.head_dim_, cfg.num_kv_heads
+
+    def slot_cache(kind):
+        if kind == "a":
+            return dict(k=jnp.zeros((batch, hkv, max_seq, hd), dtype),
+                        v=jnp.zeros((batch, hkv, max_seq, hd), dtype))
+        if kind == "m":
+            return init_mamba_state(cfg, batch, dtype)
+        if kind == "M":
+            return init_mlstm_state(cfg, batch)
+        return init_slstm_state(cfg, batch)
+
+    one_group = {f"s{j}": slot_cache(k) for j, k in enumerate(cfg.block_pattern)}
+    groups = jax.tree_util.tree_map(
+        lambda t: jnp.broadcast_to(t[None], (cfg.num_groups,) + t.shape),
+        one_group)
+    return dict(pos=jnp.int32(0), groups=groups)
+
+
+def _apply_group_serve(gparams, gcache, x, cos, sin, pos, cfg: ModelConfig):
+    new_cache = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        slot = gparams[f"s{j}"]
+        sc = gcache[f"s{j}"]
+        if kind == "a":
+            x, nc = _attn_apply(slot, x, cos, sin, cfg, cache=sc, pos=pos)
+        elif kind == "m":
+            h = rms_norm(x, slot["norm1"], cfg.norm_eps)
+            if x.shape[1] == 1:
+                y, nc = mamba_decode_step(slot["mamba"], sc, h, cfg)
+            else:  # prefill: parallel path, returning the decode state
+                y, nc = mamba_forward(slot["mamba"], h, cfg, return_state=True)
+            x = x + y
+        elif kind == "M":
+            h = rms_norm(x, slot["norm1"], cfg.norm_eps)
+            if x.shape[1] == 1:
+                y, nc = mlstm_decode_step(slot["mlstm"], sc, h, cfg)
+            else:
+                y, nc = mlstm_forward(slot["mlstm"], h, cfg, return_state=True)
+            x = x + y
+        else:
+            h = rms_norm(x, slot["norm1"], cfg.norm_eps)
+            if x.shape[1] == 1:
+                y, nc = slstm_decode_step(slot["slstm"], sc, h, cfg)
+            else:
+                y, nc = slstm_forward(slot["slstm"], h, cfg, return_state=True)
+            x = x + y
+        if kind in ("a", "m"):
+            x, _ = _mlp_apply(slot, x, cfg, j)
+        new_cache[f"s{j}"] = nc
+    return x, new_cache
+
+
+def prefill(cfg: ModelConfig, params, batch, max_seq: int):
+    """Returns (last-token logits, cache). batch: tokens/embeds (B, S)."""
+    x = _embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    cos, sin = _rope_tables(cfg, positions, batch)
+    cache = init_cache(cfg, b, max_seq)
+
+    def group_fn(x, xs):
+        gparams, gcache = xs
+        x, nc = _apply_group_serve(gparams, gcache, x, cos, sin,
+                                   jnp.int32(0), cfg)
+        return x, nc
+
+    if cfg.remat == "layer":
+        group_fn = jax.checkpoint(group_fn)
+    x, new_groups = jax.lax.scan(group_fn, x, (params["groups"],
+                                               cache["groups"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(cfg, params, x[:, -1:])[:, 0].astype(jnp.float32)
+    return logits, dict(pos=jnp.int32(s), groups=new_groups)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens_or_embeds):
+    """One decode step. tokens: (B, 1) int32 (or embeds (B, 1, D)).
+    Returns (logits (B, V), new cache)."""
+    batch = ({"tokens": tokens_or_embeds} if cfg.input_mode == "tokens"
+             else {"embeds": tokens_or_embeds})
+    x = _embed_inputs(cfg, params, batch)
+    b = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    cos, sin = _rope_tables(cfg, positions, batch)
+
+    def group_fn(x, xs):
+        gparams, gcache = xs
+        x, nc = _apply_group_serve(gparams, gcache, x, cos, sin, pos, cfg)
+        return x, nc
+
+    x, new_groups = jax.lax.scan(group_fn, x, (params["groups"],
+                                               cache["groups"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(cfg, params, x)[:, 0].astype(jnp.float32)
+    return logits, dict(pos=pos + 1, groups=new_groups)

@@ -1,0 +1,268 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, recurrent), for the xlstm-125m architecture.
+
+mLSTM here is the stabilized sigmoid-gated variant: per head
+    C_t = f_t·C_{t-1} + i_t·k_t v_tᵀ,   n_t = f_t·n_{t-1} + i_t·k_t,
+    h_t = (C_tᵀ q_t) / max(|n_tᵀ q_t|, 1)
+computed chunkwise: intra-chunk decay matrix D_ij = exp(F_i − F_j)·i_j with
+F = cumsum(log f) (log-space, stable), inter-chunk via a scanned (C, n)
+state — the same two-level structure as the paper's parallel form. Decode is
+the O(1) recurrence.
+
+sLSTM keeps the paper's exponential gating with the m-stabilizer state and a
+diagonal recurrence (simplification of the block-diagonal recurrent matrix;
+noted in DESIGN.md), evaluated with lax.scan over time.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_dense, rms_norm
+
+__all__ = ["init_mlstm_params", "mlstm_forward", "mlstm_decode_step",
+           "init_mlstm_state", "init_slstm_params", "slstm_forward",
+           "slstm_decode_step", "init_slstm_state"]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _xl_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    h = cfg.num_heads
+    di -= di % h
+    return di, h, di // h
+
+
+def init_mlstm_params(key, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    di, h, dh = _xl_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return dict(
+        up_proj=init_dense(ks[0], (d, 2 * di), dtype=dtype),
+        conv_w=(jax.random.normal(ks[1], (4, di), jnp.float32) * 0.2).astype(dtype),
+        q_proj=init_dense(ks[2], (di, di), dtype=dtype),
+        k_proj=init_dense(ks[3], (di, di), dtype=dtype),
+        v_proj=init_dense(ks[4], (di, di), dtype=dtype),
+        i_gate=init_dense(ks[5], (di, h), dtype=jnp.float32),
+        f_gate=init_dense(ks[6], (di, h), dtype=jnp.float32),
+        f_bias=jnp.full((h,), 3.0, jnp.float32),  # start remembering
+        gn_scale=jnp.ones((di,), dtype),
+        out_proj=init_dense(ks[7], (di, d), dtype=dtype),
+    )
+
+
+def _mlstm_qkvif(params, x, cfg):
+    from repro.models.ssm import _causal_conv
+    di, h, dh = _xl_dims(cfg)
+    b, s, _ = x.shape
+    up = jnp.einsum("bsd,de->bse", x, params["up_proj"])
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xm, params["conv_w"],
+                                  jnp.zeros((di,), x.dtype)
+                                  ).astype(jnp.float32)).astype(x.dtype)
+    q = jnp.einsum("bsd,de->bse", xc, params["q_proj"]).reshape(b, s, h, dh)
+    k = (jnp.einsum("bsd,de->bse", xc, params["k_proj"]).reshape(b, s, h, dh)
+         * (dh ** -0.5))
+    v = jnp.einsum("bsd,de->bse", xm, params["v_proj"]).reshape(b, s, h, dh)
+    xcf = xc.astype(jnp.float32)
+    i = jax.nn.sigmoid(xcf @ params["i_gate"])                 # (B,S,H)
+    logf = jax.nn.log_sigmoid(xcf @ params["f_gate"] + params["f_bias"])
+    return q, k, v, i, logf, z
+
+
+def mlstm_forward(params, x, cfg: ModelConfig, chunk: int = 256,
+                  return_state: bool = False):
+    b, s, d = x.shape
+    di, h, dh = _xl_dims(cfg)
+    q, k, v, i, logf, z = _mlstm_qkvif(params, x, cfg)
+    xm_raw = jnp.split(jnp.einsum("bsd,de->bse", x, params["up_proj"]),
+                       2, axis=-1)[0] if return_state else None
+
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        zeros = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))  # noqa: E731
+        q, k, v = zeros(q), zeros(k), zeros(v)
+        i, logf = zeros(i), zeros(logf)
+    sp = s + pad
+    nch = sp // c
+    resh = lambda t: t.reshape(b, nch, c, *t.shape[2:]).swapaxes(0, 1)  # noqa: E731
+    qs, ks, vs, is_, lfs = map(resh, (q, k, v, i, logf))
+
+    def step(carry, inp):
+        C, n = carry                                            # (B,H,dh,dh),(B,H,dh)
+        qc, kc, vc, ic, lfc = inp
+        qf = qc.astype(jnp.float32)
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        F = jnp.cumsum(lfc, axis=1)                             # (B,c,H)
+        # intra-chunk: D_ij = exp(F_i - F_j) i_j for j<=i (log-stable)
+        dmat = jnp.where(
+            (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :])[None, :, :, None],
+            jnp.exp(F[:, :, None, :] - F[:, None, :, :]), 0.0)  # (B,c,c,H)
+        att = jnp.einsum("bihe,bjhe->bijh", qf, kf) * dmat * ic[:, None]
+        h_intra = jnp.einsum("bijh,bjhe->bihe", att, vf)
+        # normalizer: ñ_i = Σ_j D_ij i_j k_j  then ñ·q
+        nk = jnp.einsum("bijh,bjhe->bihe",
+                        dmat * ic[:, None], kf)                 # (B,c,H,dh)
+        # inter-chunk: state contribution scaled by exp(F_i)
+        ef = jnp.exp(F)                                         # (B,c,H)
+        h_inter = jnp.einsum("bihe,bhef->bihf", qf * ef[..., None], C)
+        num = h_intra + h_inter
+        den_q = jnp.einsum("bihe,bihe->bih", qf, nk) + jnp.einsum(
+            "bihe,bhe->bih", qf * ef[..., None], n)
+        out = num / jnp.maximum(jnp.abs(den_q), 1.0)[..., None]
+        # update state to end of chunk
+        f_end = jnp.exp(F[:, -1])                               # (B,H)
+        decay_j = jnp.exp(F[:, -1][:, None] - F) * ic           # (B,c,H)
+        C_new = C * f_end[..., None, None] + jnp.einsum(
+            "bjh,bjhe,bjhf->bhef", decay_j, kf, vf)
+        n_new = n * f_end[..., None] + jnp.einsum("bjh,bjhe->bhe", decay_j, kf)
+        return (C_new, n_new), out
+
+    C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    (C_end, n_end), outs = jax.lax.scan(step, (C0, n0), (qs, ks, vs, is_, lfs))
+    out = outs.swapaxes(0, 1).reshape(b, sp, h, dh)[:, :s]
+    # per-head group norm
+    mean = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = (out - mean) * jax.lax.rsqrt(var + 1e-5)
+    out = out.reshape(b, s, di).astype(x.dtype) * params["gn_scale"]
+    out = out * jax.nn.silu(z[:, :s].astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bsd,de->bse", out, params["out_proj"])
+    if return_state:
+        win = jnp.pad(xm_raw.astype(jnp.float32),
+                      ((0, 0), (max(3 - s, 0), 0), (0, 0)))[:, -3:]
+        return y, dict(C=C_end, n=n_end, conv=win)
+    return y
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    di, h, dh = _xl_dims(cfg)
+    return dict(C=jnp.zeros((batch, h, dh, dh), jnp.float32),
+                n=jnp.zeros((batch, h, dh), jnp.float32),
+                conv=jnp.zeros((batch, 3, di), jnp.float32))
+
+
+def mlstm_decode_step(params, state, x, cfg: ModelConfig):
+    """x: (B, 1, D); O(1) recurrent update."""
+    b = x.shape[0]
+    di, h, dh = _xl_dims(cfg)
+    up = jnp.einsum("bsd,de->bse", x, params["up_proj"])
+    xm, z = jnp.split(up, 2, axis=-1)                           # (B,1,di)
+    window = jnp.concatenate([state["conv"], xm.astype(jnp.float32)], axis=1)
+    conv = (window * params["conv_w"][None].astype(jnp.float32)).sum(axis=1)
+    xc = jax.nn.silu(conv).astype(x.dtype)                      # (B,di)
+    q = (xc @ params["q_proj"]).reshape(b, h, dh).astype(jnp.float32)
+    k = ((xc @ params["k_proj"]).reshape(b, h, dh) * (dh ** -0.5)
+         ).astype(jnp.float32)
+    v = (xm[:, 0] @ params["v_proj"]).reshape(b, h, dh).astype(jnp.float32)
+    xcf = xc.astype(jnp.float32)
+    i = jax.nn.sigmoid(xcf @ params["i_gate"])                  # (B,H)
+    f = jax.nn.sigmoid(xcf @ params["f_gate"] + params["f_bias"])
+    C = state["C"] * f[..., None, None] + i[..., None, None] * (
+        k[..., :, None] * v[..., None, :])                      # (B,H,dh,dh)
+    n = state["n"] * f[..., None] + i[..., None] * k
+    num = jnp.einsum("bhe,bhef->bhf", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", q, n)), 1.0)
+    out = num / den[..., None]
+    mean = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = ((out - mean) * jax.lax.rsqrt(var + 1e-5)).reshape(b, di)
+    out = out.astype(x.dtype) * params["gn_scale"]
+    out = out * jax.nn.silu(z[:, 0].astype(jnp.float32)).astype(x.dtype)
+    y = (out @ params["out_proj"])[:, None]
+    return y, dict(C=C, n=n, conv=window[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm_params(key, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    dup = int(4 * d / 3 / 2) * 2  # post-up MLP width (pf 4/3)
+    return dict(
+        w_izfo=init_dense(ks[0], (d, 4 * d), dtype=dtype),
+        r_izfo=(jax.random.normal(ks[1], (4, d), jnp.float32) * 0.1),
+        b_izfo=jnp.zeros((4, d), jnp.float32),
+        up_w=init_dense(ks[2], (d, 2 * dup), dtype=dtype),
+        down_w=init_dense(ks[3], (dup, d), dtype=dtype),
+        norm2=jnp.ones((d,), dtype),
+    )
+
+
+def _slstm_cell(params, xw, state):
+    """One timestep. xw: (B, 4, d) pre-activations from the input proj."""
+    c, n, hprev, m = state
+    r = params["r_izfo"]
+    b = params["b_izfo"]
+    zi = xw[:, 0] + r[0] * hprev + b[0]
+    zz = xw[:, 1] + r[1] * hprev + b[1]
+    zf = xw[:, 2] + r[2] * hprev + b[2]
+    zo = xw[:, 3] + r[3] * hprev + b[3]
+    log_i = zi
+    log_f = jax.nn.log_sigmoid(zf)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i = jnp.exp(log_i - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(zz)
+    o = jax.nn.sigmoid(zo)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h, m_new), h
+
+
+def slstm_forward(params, x, cfg: ModelConfig, return_state: bool = False):
+    b, s, d = x.shape
+    xw = jnp.einsum("bsd,de->bse", x, params["w_izfo"]).astype(jnp.float32)
+    xw = xw.reshape(b, s, 4, d)
+
+    def step(state, xt):
+        return _slstm_cell(params, xt, state)
+
+    z0 = jnp.zeros((b, d), jnp.float32)
+    state0 = (z0, z0, z0, jnp.full((b, d), -1e30, jnp.float32))
+    (ce, ne, he, me), hs = jax.lax.scan(step, state0, xw.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)                       # (B,S,d)
+    # post-up gated MLP (pf 4/3)
+    h = rms_norm(h, params["norm2"], 1e-5)
+    up = jnp.einsum("bsd,de->bse", h, params["up_w"])
+    u, g = jnp.split(up, 2, axis=-1)
+    y = jnp.einsum("bsf,fd->bsd",
+                   u * jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype),
+                   params["down_w"])
+    if return_state:
+        return y, dict(c=ce, n=ne, h=he, m=me)
+    return y
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return dict(c=z, n=z, h=z, m=jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def slstm_decode_step(params, state, x, cfg: ModelConfig):
+    b = x.shape[0]
+    d = cfg.d_model
+    xw = (x[:, 0] @ params["w_izfo"]).astype(jnp.float32).reshape(b, 4, d)
+    st = (state["c"], state["n"], state["h"], state["m"])
+    (c, n, h, m), hout = _slstm_cell(params, xw, st)
+    hcast = hout[:, None].astype(x.dtype)
+    hn = rms_norm(hcast, params["norm2"], 1e-5)
+    up = jnp.einsum("bsd,de->bse", hn, params["up_w"])
+    u, g = jnp.split(up, 2, axis=-1)
+    y = jnp.einsum("bsf,fd->bsd",
+                   u * jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype),
+                   params["down_w"])
+    return y, dict(c=c, n=n, h=h, m=m)

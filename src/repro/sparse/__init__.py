@@ -1,0 +1,16 @@
+"""Sparse direct-solver substrate: containers, reordering algorithms,
+symbolic analysis, numeric solvers (simplicial, skyline, multifrontal),
+and the synthetic Florida-like matrix suite."""
+from .csr import (CSRMatrix, bandwidth, coo_to_csr, csr_from_dense, make_spd,
+                  permute_symmetric, profile, symmetrize_pattern)
+from .reorder import LABEL_ALGORITHMS, REORDERINGS, get_reordering
+from .symbolic import (SymbolicFactor, cholesky_flops, column_counts, etree,
+                       fill_in, postorder, supernodes, symbolic_cholesky)
+
+__all__ = [
+    "CSRMatrix", "bandwidth", "coo_to_csr", "csr_from_dense", "make_spd",
+    "permute_symmetric", "profile", "symmetrize_pattern",
+    "LABEL_ALGORITHMS", "REORDERINGS", "get_reordering",
+    "SymbolicFactor", "cholesky_flops", "column_counts", "etree", "fill_in",
+    "postorder", "supernodes", "symbolic_cholesky",
+]

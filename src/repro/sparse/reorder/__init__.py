@@ -1,0 +1,67 @@
+"""Reordering algorithm registry.
+
+The seven algorithms of the paper's Table 2 plus the natural (identity)
+ordering. The four *label* algorithms used by the selector are
+``rcm``, ``amd``, ``nd``, ``scotch`` (one per category, as in the paper).
+
+Every entry maps ``CSRMatrix -> perm`` with ``perm[new] = old``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from ..csr import CSRMatrix
+from .amd import amd_order, amf_order, md_order, qamd_order
+from .nd import nd_order
+from .hybrid import scotch_order
+from .rcm import cm_order, rcm_order
+
+__all__ = [
+    "REORDERINGS",
+    "LABEL_ALGORITHMS",
+    "CATEGORY_OF",
+    "get_reordering",
+    "natural_order",
+    "cm_order", "rcm_order", "md_order", "amd_order", "qamd_order",
+    "amf_order", "nd_order", "scotch_order",
+]
+
+
+def natural_order(a: CSRMatrix) -> np.ndarray:
+    return np.arange(a.n, dtype=np.int64)
+
+
+REORDERINGS: Dict[str, Callable[[CSRMatrix], np.ndarray]] = {
+    "natural": natural_order,
+    "cm": cm_order,
+    "rcm": rcm_order,
+    "md": md_order,
+    "amd": amd_order,
+    "qamd": qamd_order,
+    "amf": amf_order,
+    "nd": nd_order,
+    "scotch": scotch_order,
+}
+
+# The paper's four predictive labels (one per Table 2 category).
+LABEL_ALGORITHMS: List[str] = ["amd", "scotch", "nd", "rcm"]
+
+# Table 2: category per algorithm.
+CATEGORY_OF: Dict[str, str] = {
+    "rcm": "bandwidth-reduction", "cm": "bandwidth-reduction",
+    "amd": "fill-in-reduction", "md": "fill-in-reduction",
+    "qamd": "fill-in-reduction", "amf": "fill-in-reduction",
+    "nd": "graph-based",
+    "scotch": "hybrid",
+    "natural": "identity",
+}
+
+
+def get_reordering(name: str) -> Callable[[CSRMatrix], np.ndarray]:
+    try:
+        return REORDERINGS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown reordering {name!r}; available: {sorted(REORDERINGS)}")

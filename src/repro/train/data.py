@@ -1,0 +1,91 @@
+"""Deterministic synthetic data pipeline.
+
+Every batch is a pure function of (seed, step) via fold_in — restartable from
+any step with no iterator state to checkpoint, and identical across hosts
+(each host materializes only its shard in a multi-process deployment; here
+one process materializes the global batch).
+
+Token streams are Zipf-distributed (vocab-realistic softmax pressure);
+embedding-mode archs (VLM/audio stubs) get unit-variance frame/patch
+embeddings; Qwen2-VL also gets stub M-RoPE position ids shaped like a
+(t, h, w) grid traversal.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, ShapeSpec
+
+__all__ = ["SyntheticData", "input_specs"]
+
+
+class SyntheticData:
+    def __init__(self, cfg: ModelConfig, shape: ShapeSpec, seed: int = 0):
+        self.cfg, self.shape, self.seed = cfg, shape, seed
+
+    def batch(self, step: int) -> Dict[str, Any]:
+        cfg, shp = self.cfg, self.shape
+        rng = np.random.default_rng((self.seed << 20) ^ step)
+        b, s = shp.global_batch, shp.seq_len
+        out: Dict[str, Any] = {}
+        if cfg.input_mode == "tokens":
+            # Zipf tokens clipped to vocab (power-law like natural text)
+            toks = rng.zipf(1.3, size=(b, s + 1)).astype(np.int64)
+            toks = np.minimum(toks - 1, cfg.vocab_size - 1).astype(np.int32)
+            out["tokens"] = toks[:, :-1]
+            out["labels"] = toks[:, 1:].astype(np.int32)
+        else:
+            out["embeds"] = rng.standard_normal((b, s, cfg.d_model)
+                                                ).astype(np.float32)
+            out["labels"] = rng.integers(0, cfg.vocab_size, (b, s)
+                                         ).astype(np.int32)
+            if cfg.mrope:
+                out["positions3"] = _stub_mrope_positions(b, s)
+        return out
+
+    def decode_batch(self, step: int) -> Any:
+        """One decode token per sequence."""
+        cfg, shp = self.cfg, self.shape
+        rng = np.random.default_rng((self.seed << 21) ^ step)
+        b = shp.global_batch
+        if cfg.input_mode == "tokens":
+            return rng.integers(0, cfg.vocab_size, (b, 1)).astype(np.int32)
+        return rng.standard_normal((b, 1, cfg.d_model)).astype(np.float32)
+
+
+def _stub_mrope_positions(b: int, s: int) -> np.ndarray:
+    """(3, B, S): a text prefix then a fake image grid (t=const, h/w raster)."""
+    text = s // 2
+    grid = s - text
+    side = max(int(np.sqrt(grid)), 1)
+    t = np.concatenate([np.arange(text), np.full(grid, text)])
+    h = np.concatenate([np.arange(text),
+                        text + (np.arange(grid) // side)])
+    w = np.concatenate([np.arange(text),
+                        text + (np.arange(grid) % side)])
+    pos = np.stack([t, h, w]).astype(np.int32)          # (3, S)
+    return np.broadcast_to(pos[:, None], (3, b, s)).copy()
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for dry-run lowering (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        if cfg.input_mode == "tokens":
+            return {"tokens": sds((b, 1), jnp.int32)}
+        return {"embeds": sds((b, 1, cfg.d_model), jnp.float32)}
+    out: Dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        out["tokens"] = sds((b, s), jnp.int32)
+    else:
+        out["embeds"] = sds((b, s, cfg.d_model), jnp.float32)
+        if cfg.mrope:
+            out["positions3"] = sds((3, b, s), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = sds((b, s), jnp.int32)
+    return out

@@ -1,0 +1,16 @@
+"""LR schedule: linear warmup + cosine decay to a floor."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine"]
+
+
+def warmup_cosine(step, *, warmup_steps: int = 100, total_steps: int = 10000,
+                  floor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    t = jnp.clip((step - warmup_steps) / jnp.maximum(
+        total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return warm * cos

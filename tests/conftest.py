@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 device
+(the 512-device override belongs exclusively to repro.launch.dryrun)."""
+import numpy as np
+import pytest
+
+from repro.sparse.dataset import (banded, block_arrow, grid2d,
+                                  permuted_banded, scalefree)
+
+
+@pytest.fixture(scope="session")
+def small_suite():
+    rng = np.random.default_rng(0)
+    return [
+        grid2d(12, 12, "g12"),
+        banded(150, 4, 0.8, rng, "band150"),
+        permuted_banded(150, 3, 0.85, rng, "pband150"),
+        scalefree(120, 2, rng, "sf120"),
+        block_arrow(3, 20, 8, rng, "arrow"),
+    ]
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(42)

@@ -1,0 +1,68 @@
+"""CSR container: construction, permutation, bandwidth/profile oracles."""
+import numpy as np
+import pytest
+
+from repro.sparse.csr import (bandwidth, coo_to_csr, csr_from_dense,
+                              make_spd, permute_symmetric, profile,
+                              symmetrize_pattern)
+
+
+def dense_bandwidth(a):
+    idx = np.nonzero(a)
+    return int(np.abs(idx[0] - idx[1]).max()) if idx[0].size else 0
+
+
+def dense_profile(a):
+    total = 0
+    for i in range(a.shape[0]):
+        nz = np.nonzero(a[i])[0]
+        if nz.size and nz[0] < i:
+            total += i - nz[0]
+    return total
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_roundtrip_and_metrics(seed):
+    rng = np.random.default_rng(seed)
+    n = 40
+    a = (rng.random((n, n)) < 0.1) * rng.standard_normal((n, n))
+    m = csr_from_dense(a)
+    np.testing.assert_allclose(m.to_dense(), a)
+    assert bandwidth(m) == dense_bandwidth(a)
+    assert profile(m) == dense_profile(a)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_permute_symmetric_matches_dense(seed):
+    rng = np.random.default_rng(seed)
+    n = 30
+    a = (rng.random((n, n)) < 0.15) * rng.standard_normal((n, n))
+    a = a + a.T
+    m = csr_from_dense(a)
+    perm = rng.permutation(n)
+    mp = permute_symmetric(m, perm)
+    np.testing.assert_allclose(mp.to_dense(), a[np.ix_(perm, perm)])
+
+
+def test_make_spd_is_spd(small_suite):
+    for m in small_suite:
+        d = m.to_dense()
+        np.testing.assert_allclose(d, d.T)
+        np.linalg.cholesky(d)  # raises if not SPD
+
+
+def test_symmetrize_pattern():
+    rng = np.random.default_rng(3)
+    a = (rng.random((25, 25)) < 0.1) * 1.0
+    m = csr_from_dense(a)
+    s = symmetrize_pattern(m)
+    assert s.is_structurally_symmetric()
+    # idempotent on already-symmetric input
+    s2 = symmetrize_pattern(s)
+    assert np.array_equal(s2.indices, s.indices)
+
+
+def test_matvec(small_suite):
+    for m in small_suite:
+        x = np.random.default_rng(0).standard_normal(m.n)
+        np.testing.assert_allclose(m.matvec(x), m.to_dense() @ x, rtol=1e-10)

@@ -1,0 +1,79 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,s,d", [
+    (1, 2, 2, 32, 16), (2, 4, 2, 64, 32), (1, 8, 1, 96, 64), (2, 2, 2, 33, 32),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_attention_sweep(b, hq, hkv, s, d, causal, dtype):
+    q = jnp.asarray(RNG.standard_normal((b, hq, s, d)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), dtype)
+    out = ops.attention(q, k, v, causal=causal, block_q=32, block_kv=32)
+    rep = hq // hkv
+    kk = jnp.repeat(k, rep, axis=1).reshape(b * hq, s, d)
+    vv = jnp.repeat(v, rep, axis=1).reshape(b * hq, s, d)
+    want = ref.attention_ref(q.reshape(b * hq, s, d), kk, vv,
+                             causal=causal).reshape(b, hq, s, d)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# frontal partial Cholesky
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,npiv,bs", [
+    (8, 3, 8), (24, 24, 8), (40, 17, 16), (65, 1, 32), (70, 33, 32),
+])
+def test_frontal_factor_sweep(m, npiv, bs):
+    a = RNG.standard_normal((m, m))
+    f = a @ a.T + m * np.eye(m)
+    L11, L21, S = ops.frontal_factor(jnp.asarray(f), npiv, bs=bs)
+    r11, r21, rS = ref.partial_cholesky_ref(jnp.asarray(f), npiv)
+    np.testing.assert_allclose(np.asarray(L11), np.asarray(r11),
+                               rtol=1e-4, atol=1e-4)
+    if npiv < m:
+        np.testing.assert_allclose(np.asarray(L21), np.asarray(r21),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(S), np.asarray(rS),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_nt_tiles():
+    a = jnp.asarray(RNG.standard_normal((64, 32)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((48, 32)), jnp.float32)
+    c = jnp.asarray(RNG.standard_normal((64, 48)), jnp.float32)
+    out = ops.matmul_nt_padded(a, b, c, alpha=-1.0, beta=1.0, bs=16)
+    want = ref.matmul_nt_ref(a, b, c, alpha=-1.0, beta=1.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# block-ELL SpMV
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,band,bs", [(64, 3, 8), (100, 5, 8), (37, 2, 16)])
+def test_spmv_sweep(n, band, bs):
+    from repro.sparse.dataset import banded
+    rng = np.random.default_rng(n)
+    m = banded(n, band, 0.7, rng, "b")
+    x = rng.standard_normal(n)
+    y = ops.spmv(m.indptr, m.indices, m.data, x, bs=bs)
+    np.testing.assert_allclose(y, m.matvec(x), rtol=1e-4, atol=1e-4)

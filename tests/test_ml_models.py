@@ -1,0 +1,61 @@
+"""The seven Fig.-4 model families: separable-data sanity + API contract."""
+import numpy as np
+import pytest
+
+from repro.core.ml import MODEL_ZOO, accuracy_score
+from repro.core.model_selection import (GridSearchCV, cross_val_score,
+                                        kfold_indices, train_test_split)
+
+
+def blobs(n=240, k=3, d=6, seed=0, spread=4.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((k, d)) * spread
+    y = rng.integers(0, k, n)
+    x = centers[y] + rng.standard_normal((n, d))
+    return x, y
+
+
+@pytest.mark.parametrize("name", sorted(MODEL_ZOO))
+def test_model_learns_blobs(name):
+    x, y = blobs()
+    xtr, xte, ytr, yte, _, _ = train_test_split(x, y, 0.25, seed=1)
+    model = MODEL_ZOO[name]()
+    model.fit(xtr, ytr)
+    acc = model.score(xte, yte)
+    assert acc > 0.85, (name, acc)
+
+
+@pytest.mark.parametrize("name", sorted(MODEL_ZOO))
+def test_clone_contract(name):
+    m = MODEL_ZOO[name]()
+    c = m.clone()
+    assert type(c) is type(m)
+    assert c.params == m.params
+    assert c is not m
+
+
+def test_kfold_partitions():
+    folds = kfold_indices(53, k=5, seed=0)
+    all_val = np.concatenate([v for _, v in folds])
+    assert np.array_equal(np.sort(all_val), np.arange(53))
+    for tr, va in folds:
+        assert np.intersect1d(tr, va).size == 0
+
+
+def test_grid_search_picks_reasonable_tree():
+    x, y = blobs(n=300, spread=2.0, seed=3)
+    gs = GridSearchCV(MODEL_ZOO["decision_tree"](),
+                      {"max_depth": [1, None]}, cv=4)
+    gs.fit(x, y)
+    assert gs.best_params_["max_depth"] is None  # depth-1 stump can't fit 3 blobs
+    assert gs.best_score_ > 0.8
+
+
+def test_cross_val_score_range():
+    x, y = blobs()
+    s = cross_val_score(MODEL_ZOO["naive_bayes"](), x, y, cv=4)
+    assert 0.7 < s <= 1.0
+
+
+def test_accuracy_score_formula():
+    assert accuracy_score([1, 2, 3, 4], [1, 2, 0, 4]) == 0.75

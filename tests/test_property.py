@@ -1,0 +1,100 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.features import FEATURE_NAMES, extract_features
+from repro.core.scaling import MinMaxScaler, StandardScaler
+from repro.distributed.gradient_compression import _quantize
+from repro.sparse.csr import (bandwidth, coo_to_csr, make_spd,
+                              permute_symmetric)
+from repro.sparse.reorder import LABEL_ALGORITHMS, get_reordering
+from repro.sparse.symbolic import column_counts, etree, fill_in
+
+
+@st.composite
+def random_csr(draw, max_n=40):
+    n = draw(st.integers(4, max_n))
+    density = draw(st.floats(0.05, 0.3))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n, n)) < density
+    rows, cols = np.nonzero(mask)
+    a = coo_to_csr(rows, cols, rng.standard_normal(rows.size), (n, n))
+    return make_spd(a)
+
+
+@given(random_csr())
+@settings(max_examples=25, deadline=None)
+def test_spd_and_solvable(m):
+    d = m.to_dense()
+    np.testing.assert_allclose(d, d.T)
+    np.linalg.cholesky(d)  # SPD by construction
+
+
+@given(random_csr(), st.sampled_from(LABEL_ALGORITHMS))
+@settings(max_examples=20, deadline=None)
+def test_reorderings_are_permutations(m, alg):
+    perm = get_reordering(alg)(m)
+    assert np.array_equal(np.sort(perm), np.arange(m.n))
+
+
+@given(random_csr())
+@settings(max_examples=15, deadline=None)
+def test_fill_in_nonnegative_and_counts_bounded(m):
+    assert fill_in(m) >= 0
+    counts = column_counts(m)
+    assert (counts >= 1).all()
+    assert (counts <= m.n).all()
+
+
+@given(random_csr())
+@settings(max_examples=15, deadline=None)
+def test_permutation_preserves_nnz_and_spd(m):
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(m.n)
+    mp = permute_symmetric(m, perm)
+    assert mp.nnz == m.nnz
+    assert bandwidth(mp) <= m.n - 1
+    f0 = extract_features(m)
+    f1 = extract_features(mp)
+    i = FEATURE_NAMES.index("nnz")
+    assert f0[i] == f1[i]
+
+
+@given(random_csr())
+@settings(max_examples=10, deadline=None)
+def test_etree_is_forest(m):
+    parent = etree(m)
+    # following parents always terminates (parents strictly increase)
+    for v in range(m.n):
+        steps = 0
+        while parent[v] != -1:
+            v = int(parent[v])
+            steps += 1
+            assert steps <= m.n
+
+
+@given(st.lists(st.floats(-1e4, 1e4), min_size=8, max_size=200))
+@settings(max_examples=30, deadline=None)
+def test_scalers_roundtrip_ranges(vals):
+    x = np.array(vals, dtype=np.float64).reshape(-1, 2) \
+        if len(vals) % 2 == 0 else np.array(vals[:-1]).reshape(-1, 2)
+    if x.shape[0] < 2:
+        return
+    mm = MinMaxScaler().fit(x)
+    t = mm.transform(x)
+    assert t.min() >= -1e-9 and t.max() <= 1 + 1e-9
+    ss = StandardScaler().fit(x)
+    t2 = ss.transform(x)
+    assert abs(t2.mean()) < 1e-6
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(1e-3, 1e3))
+@settings(max_examples=30, deadline=None)
+def test_int8_quantization_error_bound(seed, scale):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(64) * scale, jnp.float32)
+    q, s = _quantize(g)
+    err = np.abs(np.asarray(q, np.float32) * float(s) - np.asarray(g))
+    assert err.max() <= float(s) * 0.5 + 1e-6  # half-ULP of the int8 grid

@@ -1,0 +1,65 @@
+"""Reordering algorithms: permutation validity, quality properties,
+and a SciPy RCM oracle comparison."""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+import scipy.sparse.csgraph as csgraph
+
+from repro.sparse.csr import bandwidth, permute_symmetric
+from repro.sparse.dataset import grid2d, permuted_banded, scalefree
+from repro.sparse.reorder import REORDERINGS, get_reordering
+from repro.sparse.symbolic import fill_in
+
+ALGS = sorted(REORDERINGS)
+
+
+@pytest.mark.parametrize("alg", ALGS)
+def test_valid_permutation(alg, small_suite):
+    for m in small_suite:
+        perm = get_reordering(alg)(m)
+        assert perm.shape == (m.n,)
+        assert np.array_equal(np.sort(perm), np.arange(m.n)), alg
+
+
+def test_rcm_recovers_band():
+    rng = np.random.default_rng(1)
+    m = permuted_banded(200, 3, 0.9, rng, "pb")
+    bw_before = bandwidth(m)
+    perm = get_reordering("rcm")(m)
+    bw_after = bandwidth(permute_symmetric(m, perm))
+    assert bw_after < bw_before / 4, (bw_before, bw_after)
+
+
+def test_rcm_close_to_scipy_rcm():
+    """Our RCM should land in the same bandwidth class as SciPy's."""
+    m = grid2d(15, 15, "g")
+    ours = bandwidth(permute_symmetric(m, get_reordering("rcm")(m)))
+    s = sp.csr_matrix(m.to_dense())
+    sp_perm = csgraph.reverse_cuthill_mckee(s, symmetric_mode=True)
+    theirs = bandwidth(permute_symmetric(m, np.asarray(sp_perm, np.int64)))
+    assert ours <= 2 * max(theirs, 1), (ours, theirs)
+
+
+@pytest.mark.parametrize("alg", ["md", "amd", "qamd", "amf", "scotch"])
+def test_fill_reducers_beat_natural_on_scalefree(alg):
+    rng = np.random.default_rng(0)
+    m = scalefree(150, 2, rng, "sf")
+    f_nat = fill_in(m)
+    perm = get_reordering(alg)(m)
+    f_alg = fill_in(permute_symmetric(m, perm))
+    assert f_alg < f_nat / 2, (alg, f_nat, f_alg)
+
+
+def test_nd_beats_natural_on_grid():
+    m = grid2d(20, 20, "g")
+    f_nat = fill_in(m)
+    f_nd = fill_in(permute_symmetric(m, get_reordering("nd")(m)))
+    assert f_nd < f_nat, (f_nat, f_nd)
+
+
+def test_md_exact_vs_amd_similar_quality():
+    m = grid2d(12, 12, "g")
+    f_md = fill_in(permute_symmetric(m, get_reordering("md")(m)))
+    f_amd = fill_in(permute_symmetric(m, get_reordering("amd")(m)))
+    # AMD's approximate degrees should stay within 2x of exact MD fill
+    assert f_amd <= 2 * f_md + 50, (f_md, f_amd)

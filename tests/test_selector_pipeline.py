@@ -1,0 +1,47 @@
+"""End-to-end paper pipeline on a miniature campaign."""
+import numpy as np
+import pytest
+
+from repro.core.labeling import run_labeling_campaign
+from repro.core.selector import ReorderSelector, train_selector
+from repro.sparse.dataset import generate_suite
+
+
+@pytest.fixture(scope="module")
+def mini_ds():
+    mats = list(generate_suite(count=36, seed=7, size_scale=0.35))
+    return run_labeling_campaign(mats)
+
+
+def test_campaign_shapes(mini_ds):
+    ds = mini_ds
+    assert ds.features.shape == (36, 12)
+    assert ds.times.shape == (36, 4)
+    assert set(np.unique(ds.labels)) <= {0, 1, 2, 3}
+    assert (ds.times > 0).all()
+    # at least two different winners across the suite (heterogeneity claim)
+    assert np.unique(ds.labels).size >= 2
+
+
+def test_train_selector_and_report(mini_ds, tmp_path):
+    sel, rep = train_selector(mini_ds, "random_forest", "standard",
+                              fast=True, cv=3)
+    assert 0.0 <= rep["test_accuracy"] <= 1.0
+    assert rep["time_ideal"] <= rep["time_predicted"] + 1e-9
+    assert rep["time_ideal"] <= rep["time_amd"] + 1e-9
+    # persistence roundtrip
+    p = tmp_path / "sel.pkl"
+    sel.save(str(p))
+    sel2 = ReorderSelector.load(str(p))
+    f = mini_ds.features[:5]
+    np.testing.assert_array_equal(sel.predict_features(f),
+                                  sel2.predict_features(f))
+
+
+def test_select_on_matrix(mini_ds):
+    sel, _ = train_selector(mini_ds, "decision_tree", "minmax", fast=True,
+                            cv=3)
+    mats = list(generate_suite(count=3, seed=9, size_scale=0.3))
+    alg, dt = sel.select(mats[0])
+    assert alg in mini_ds.algorithms
+    assert dt < 1.0  # prediction is negligible vs solve (paper Table 5)

@@ -1,0 +1,66 @@
+"""Symbolic factorization vs a dense Cholesky oracle."""
+import numpy as np
+import pytest
+
+from repro.sparse.symbolic import (cholesky_flops, column_counts, etree,
+                                   postorder, supernodes, symbolic_cholesky)
+
+
+def dense_chol_pattern(a, tol=1e-12):
+    """Nonzero pattern of L from dense Cholesky (no-cancellation values)."""
+    L = np.linalg.cholesky(a)
+    return np.abs(L) > tol
+
+
+@pytest.mark.parametrize("idx", [0, 1, 2, 3, 4])
+def test_symbolic_pattern_matches_dense(idx, small_suite):
+    m = small_suite[idx]
+    if m.n > 200:
+        pytest.skip("dense oracle too big")
+    sym = symbolic_cholesky(m)
+    patt = dense_chol_pattern(m.to_dense())
+    for j in range(m.n):
+        ours = set(sym.Li[sym.Lp[j]:sym.Lp[j + 1]].tolist())
+        dense = set(np.nonzero(patt[:, j])[0].tolist())
+        # symbolic must be a superset (numeric cancellation can only shrink)
+        assert dense <= ours, (j, dense - ours)
+    # counts consistent with pattern
+    np.testing.assert_array_equal(sym.counts, np.diff(sym.Lp))
+
+
+def test_counts_equal_pattern_sizes(small_suite):
+    for m in small_suite:
+        sym = symbolic_cholesky(m)
+        counts = column_counts(m)
+        np.testing.assert_array_equal(counts, sym.counts)
+
+
+def test_etree_parents_increase(small_suite):
+    for m in small_suite:
+        parent = etree(m)
+        j = np.arange(m.n)
+        ok = (parent == -1) | (parent > j)
+        assert ok.all()
+
+
+def test_postorder_is_permutation(small_suite):
+    for m in small_suite:
+        po = postorder(etree(m))
+        assert np.array_equal(np.sort(po), np.arange(m.n))
+
+
+def test_flops_positive_and_consistent(small_suite):
+    for m in small_suite:
+        sym = symbolic_cholesky(m)
+        assert sym.flops == cholesky_flops(m)
+        assert sym.flops >= m.n  # at least one sqrt per column
+
+
+def test_supernodes_partition(small_suite):
+    for m in small_suite:
+        sym = symbolic_cholesky(m)
+        ptr, of = supernodes(sym)
+        assert ptr[0] == 0 and ptr[-1] == m.n
+        assert (np.diff(ptr) > 0).all()
+        for k in range(len(ptr) - 1):
+            assert (of[ptr[k]:ptr[k + 1]] == k).all()
