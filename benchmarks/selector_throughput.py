@@ -1,0 +1,80 @@
+"""Selection serving throughput: host vs device featurizer paths.
+
+    PYTHONPATH=src python -m benchmarks.selector_throughput [--use-pallas]
+
+Reports matrices/sec for ``ReorderSelector.select_batch`` at batch sizes
+1/8/64 on the host (per-matrix numpy) path and the device (CSR-native
+padded-batch) path. The device path amortizes dispatch and jit overhead
+across the batch — the spread between batch=1 and batch=64 is the argument
+for request batching in ``repro.launch.serve_selector``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+try:
+    from .common import ART
+except ImportError:  # run as a loose script: benchmarks/ on sys.path
+    from common import ART
+
+from repro.core.labeling import load_or_build
+from repro.core.selector import train_selector
+from repro.sparse.dataset import generate_suite
+
+BATCH_SIZES = (1, 8, 64)
+
+
+def bench_path(sel, mats, bs: int, path: str, use_pallas: bool,
+               repeats: int = 3) -> float:
+    """matrices/sec for select_batch at batch size bs (best of repeats).
+
+    Batches are formed from a size-sorted pool (as the serving loop does),
+    so padded batch dims track their members' true sizes.
+    """
+    mats = sorted(mats, key=lambda m: (m.nnz, m.n))
+    batches = [mats[lo : lo + bs] for lo in range(0, len(mats), bs)]
+    batches = [b for b in batches if len(b) == bs]
+    # warmup: compile/trace once per (shape-bucket, path)
+    sel.select_batch(batches[0], path=path, use_pallas=use_pallas)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for b in batches:
+            sel.select_batch(b, path=path, use_pallas=use_pallas)
+        best = min(best, time.perf_counter() - t0)
+    return bs * len(batches) / best
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--use-pallas", action="store_true",
+                   help="route device reductions through the Pallas kernels")
+    p.add_argument("--pool", type=int, default=64)
+    p.add_argument("--model", default="logistic_regression")
+    args = p.parse_args()
+
+    ds = load_or_build(cache_dir=ART, count=36, seed=7, size_scale=0.35,
+                       repeats=1, verbose=True)
+    sel, rep = train_selector(ds, args.model, "standard", fast=True, cv=3)
+    print(f"# selector: {args.model} (test_acc {rep['test_accuracy']:.2f})")
+
+    mats = list(generate_suite(count=args.pool, seed=11, size_scale=0.4))
+    print(f"# pool: {len(mats)} matrices, n∈[{min(m.n for m in mats)}, "
+          f"{max(m.n for m in mats)}], nnz_max "
+          f"{max(m.nnz for m in mats)}")
+    print("path,batch,matrices_per_sec")
+    for path in ("host", "device"):
+        for bs in BATCH_SIZES:
+            if bs > len(mats):
+                print(f"{path},{bs},skipped (pool < batch)")
+                continue
+            rate = bench_path(sel, mats, bs, path, args.use_pallas
+                              if path == "device" else False)
+            print(f"{path},{bs},{rate:.1f}")
+
+
+if __name__ == "__main__":
+    main()

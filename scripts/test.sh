@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the exact command CI and the ROADMAP use.
+#
+#   scripts/test.sh              # full suite, fail-fast
+#   scripts/test.sh tests/test_features.py -k jnp   # pass-through args
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

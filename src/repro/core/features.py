@@ -15,12 +15,20 @@
 | bandwidth  | max |i−j| over nonzeros (Eq. 2)  |
 | profile    | Σᵢ (i − min{j : aᵢⱼ≠0}) (Eq. 3)  |
 
-`extract_features` is the host (numpy) path used by the selector pipeline;
-`extract_features_jnp` is a device path over a dense/padded representation
-used by tests to cross-validate and by the serving example to batch feature
-extraction on accelerator.
+`extract_features` is the host (numpy) path used by the selector pipeline.
+Two device paths exist:
+
+* `extract_features_batch_jnp` — the serving path: CSR-native over a padded
+  ``(indptr, indices)`` batch, all 12 features via segment reductions (plus
+  an optional Pallas kernel for the bandwidth/profile/row-stats inner
+  loops). Never materializes a dense ``(n, n)`` array, so it scales to the
+  full suite on device.
+* `extract_features_jnp` — legacy dense-(n, n) path, kept only for
+  cross-validation on tiny matrices.
 """
 from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 
@@ -29,7 +37,8 @@ from repro.sparse.graph import adjacency, degrees
 
 __all__ = ["FEATURE_NAMES", "EXTENDED_FEATURE_NAMES", "extract_features",
            "extract_features_batch", "extract_features_extended",
-           "extract_features_jnp"]
+           "extract_features_jnp", "CSRBatch", "pad_csr_batch",
+           "extract_features_batch_jnp"]
 
 FEATURE_NAMES = [
     "dimension", "nnz", "nnz_ratio", "nnz_max", "nnz_min", "nnz_avg",
@@ -104,6 +113,179 @@ def extract_features_extended(a: CSRMatrix) -> np.ndarray:
         float(row_nnz.std() / max(row_nnz.mean(), 1e-12)),
     ], dtype=np.float64)
     return np.concatenate([base, ext])
+
+
+class CSRBatch(NamedTuple):
+    """Padded batch of CSR patterns — the wire format of the serving path.
+
+    indptr:  (B, N+1) int32, rows past n[b] padded with nnz[b]
+    indices: (B, E)   int32, entries past nnz[b] padded with 0
+    n:       (B,)     int32 true dimensions
+    nnz:     (B,)     int32 true nonzero counts
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    n: np.ndarray
+    nnz: np.ndarray
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(3, (x - 1).bit_length())
+
+
+def pad_csr_batch(mats: Sequence[CSRMatrix], n_max: Optional[int] = None,
+                  nnz_max: Optional[int] = None,
+                  bucket: bool = False) -> CSRBatch:
+    """Pack matrices of ragged sizes into one padded CSR buffer batch.
+
+    ``bucket=True`` rounds the padded dims up to powers of two so a stream
+    of similarly-sized batches hits a handful of jit/kernel shape buckets
+    instead of recompiling per batch (the serving path uses this).
+    """
+    assert len(mats) > 0
+    nmax = max(m.n for m in mats) if n_max is None else n_max
+    emax = max(max(m.nnz for m in mats), 1) if nnz_max is None else nnz_max
+    if bucket:
+        nmax, emax = _next_pow2(nmax), _next_pow2(emax)
+    b = len(mats)
+    indptr = np.zeros((b, nmax + 1), np.int32)
+    indices = np.zeros((b, emax), np.int32)
+    n = np.zeros(b, np.int32)
+    nnz = np.zeros(b, np.int32)
+    for i, m in enumerate(mats):
+        indptr[i, : m.n + 1] = m.indptr
+        indptr[i, m.n + 1 :] = m.nnz
+        indices[i, : m.nnz] = m.indices
+        n[i], nnz[i] = m.n, m.nnz
+    return CSRBatch(indptr, indices, n, nnz)
+
+
+_BATCH_JIT_CACHE: dict = {}
+
+
+def extract_features_batch_jnp(batch: CSRBatch, *, use_pallas: bool = False,
+                               interpret: Optional[bool] = None,
+                               jit: bool = True):
+    """All 12 Table-3 features for a padded CSR batch, on device.
+
+    Pure segment reductions over ``(indptr, indices)`` — per-entry row ids by
+    binary search on indptr, degrees of the symmetrized graph by
+    scatter-add + a vectorized reciprocal-edge membership search (sorted row
+    segments), bandwidth/profile/row-stats as flat masked reductions. Memory
+    is O(B·(N+E)); no dense (n, n) array exists at any point.
+
+    ``use_pallas=True`` routes the three entry reductions and three row
+    reductions through `repro.kernels.csr_stats` (interpret mode on CPU).
+    The whole extraction compiles as one jit per padded shape (pair with
+    ``pad_csr_batch(..., bucket=True)`` to bound the number of buckets).
+    Returns a (B, 12) float32 jax array ordered like FEATURE_NAMES.
+    """
+    if not jit:
+        return _extract_features_batch_impl(batch, use_pallas=use_pallas,
+                                            interpret=interpret)
+    import functools
+
+    import jax
+
+    key = (use_pallas, interpret)
+    fn = _BATCH_JIT_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(functools.partial(_extract_features_batch_impl,
+                                       use_pallas=use_pallas,
+                                       interpret=interpret))
+        _BATCH_JIT_CACHE[key] = fn
+    return fn(CSRBatch(*(np.asarray(a) for a in batch)))
+
+
+def _extract_features_batch_impl(batch: CSRBatch, *, use_pallas: bool,
+                                 interpret: Optional[bool]):
+    import jax
+    import jax.numpy as jnp
+
+    indptr = jnp.asarray(batch.indptr, jnp.int32)    # (B, N+1)
+    indices = jnp.asarray(batch.indices, jnp.int32)  # (B, E)
+    n = jnp.asarray(batch.n, jnp.int32)
+    nnz = jnp.asarray(batch.nnz, jnp.int32)
+    bsz, e = indices.shape
+    nmax = indptr.shape[1] - 1
+    nf = n.astype(jnp.float32)
+    nnzf = nnz.astype(jnp.float32)
+
+    entry_ids = jnp.arange(e, dtype=jnp.int32)
+    valid = entry_ids[None, :] < nnz[:, None]                       # (B, E)
+    # row id of entry k: the i with indptr[i] <= k < indptr[i+1]
+    rows = jax.vmap(
+        lambda ip: jnp.searchsorted(ip, entry_ids, side="right"))(indptr)
+    rows = jnp.clip(rows - 1, 0, nmax - 1).astype(jnp.int32)
+    cols = jnp.clip(indices, 0, nmax - 1)
+    offdiag = valid & (rows != cols)
+
+    # first-entry-of-row mask: entry k starts its row iff indptr[rows[k]] == k
+    row_start = jnp.take_along_axis(indptr, rows, axis=1)
+    isfirst = valid & (row_start == entry_ids[None, :])
+
+    row_ids = jnp.arange(nmax, dtype=jnp.int32)
+    row_valid = row_ids[None, :] < n[:, None]                       # (B, N)
+    row_nnz = indptr[:, 1:] - indptr[:, :-1]                        # (B, N)
+    nnz_avg = nnzf / jnp.maximum(nf, 1.0)
+
+    if use_pallas:
+        from repro.kernels.csr_stats import entry_stats, row_stats
+
+        es = entry_stats(rows, cols, valid.astype(jnp.int32),
+                         isfirst.astype(jnp.int32), interpret=interpret)
+        bw, prof = es[:, 0], es[:, 1]
+        rs = row_stats(row_nnz, row_valid.astype(jnp.int32), nnz_avg,
+                       interpret=interpret)
+        nnz_max, nnz_min, nnz_sq = rs[:, 0], rs[:, 1], rs[:, 2]
+        nnz_min = jnp.where(n > 0, nnz_min, 0.0)
+    else:
+        absd = jnp.where(valid, jnp.abs(rows - cols), 0)
+        bw = absd.max(axis=1).astype(jnp.float32)
+        # sum in f32: an int32 sum wraps once profile > 2^31 (n ~ 50k banded)
+        prof = jnp.where(isfirst & (cols < rows), rows - cols,
+                         0).astype(jnp.float32).sum(axis=1)
+        cnt = row_nnz.astype(jnp.float32)
+        nnz_max = jnp.where(row_valid, cnt, 0.0).max(axis=1)
+        nnz_min = jnp.where(row_valid, cnt, jnp.inf).min(axis=1)
+        nnz_sq = jnp.where(row_valid, (cnt - nnz_avg[:, None]) ** 2,
+                           0.0).sum(axis=1)
+    nnz_std = jnp.sqrt(nnz_sq / jnp.maximum(nf, 1.0))
+
+    # degrees of the symmetrized off-diagonal graph, CSR-native:
+    # deg_i = outdeg_i + indeg_i − #reciprocated edges of row i
+    bidx = jnp.broadcast_to(jnp.arange(bsz)[:, None], (bsz, e))
+    w = offdiag.astype(jnp.float32)
+    outdeg = jnp.zeros((bsz, nmax), jnp.float32).at[bidx, rows].add(w)
+    indeg = jnp.zeros((bsz, nmax), jnp.float32).at[bidx, cols].add(w)
+    # reciprocal membership: binary-search row cols[k] for value rows[k]
+    # (column segments are sorted) — lower_bound with a static trip count
+    lo = jnp.take_along_axis(indptr, cols, axis=1)
+    hi0 = jnp.take_along_axis(indptr, cols + 1, axis=1)
+    hi = hi0
+    for _ in range(max(1, int(np.ceil(np.log2(e + 1))) + 1)):
+        mid = (lo + hi) // 2
+        midv = jnp.take_along_axis(indices, jnp.clip(mid, 0, e - 1), axis=1)
+        active = lo < hi
+        go_right = active & (midv < rows)
+        hi = jnp.where(active & ~go_right, mid, hi)
+        lo = jnp.where(go_right, mid + 1, lo)
+    atlo = jnp.take_along_axis(indices, jnp.clip(lo, 0, e - 1), axis=1)
+    recip_flag = offdiag & (lo < hi0) & (atlo == rows)
+    recip = jnp.zeros((bsz, nmax), jnp.float32).at[bidx, rows].add(
+        recip_flag.astype(jnp.float32))
+    deg = outdeg + indeg - recip
+    deg_max = jnp.where(row_valid, deg, 0.0).max(axis=1)
+    deg_min = jnp.where(row_valid, deg, jnp.inf).min(axis=1)
+    deg_min = jnp.where(n > 0, deg_min, 0.0)
+    deg_avg = jnp.where(row_valid, deg, 0.0).sum(axis=1) / jnp.maximum(nf, 1.0)
+
+    return jnp.stack([
+        nf, nnzf, nnzf / jnp.maximum(nf, 1.0) ** 2,
+        nnz_max, jnp.where(n > 0, nnz_min, 0.0), nnz_avg, nnz_std,
+        deg_max, deg_min, deg_avg, bw, prof,
+    ], axis=1)
 
 
 def extract_features_jnp(dense):

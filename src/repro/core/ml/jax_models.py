@@ -79,8 +79,12 @@ class LogisticRegression(BaseClassifier):
         self.w_, self.b_ = _adam_train(loss, (w, b), p["steps"], p["lr"])
         return self
 
+    def forward_jnp(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Class scores for an on-device (B, d) batch — jit/vmap-safe."""
+        return x @ self.w_ + self.b_
+
     def predict_proba(self, x):
-        logits = jnp.asarray(x, dtype=jnp.float32) @ self.w_ + self.b_
+        logits = self.forward_jnp(jnp.asarray(x, dtype=jnp.float32))
         return np.asarray(jax.nn.softmax(logits, axis=1))
 
     def predict(self, x):
@@ -133,12 +137,23 @@ class SVMClassifier(BaseClassifier):
         self.w_, self.b_ = _adam_train(loss, (w, b), p["steps"], p["lr"])
         return self
 
+    def forward_jnp(self, x: jnp.ndarray) -> jnp.ndarray:
+        """One-vs-rest margins for an on-device (B, d) batch."""
+        return self._featurize(x) @ self.w_ + self.b_
+
     def decision_function(self, x):
-        phi = self._featurize(jnp.asarray(x, dtype=jnp.float32))
-        return np.asarray(phi @ self.w_ + self.b_)
+        return np.asarray(self.forward_jnp(jnp.asarray(x, dtype=jnp.float32)))
 
     def predict(self, x):
         return self.decision_function(x).argmax(axis=1)
+
+
+def _mlp_forward(params, x):
+    h = x
+    for (w, b) in params[:-1]:
+        h = jax.nn.relu(h @ w + b)
+    w, b = params[-1]
+    return h @ w + b
 
 
 class MLPClassifier(BaseClassifier):
@@ -164,26 +179,22 @@ class MLPClassifier(BaseClassifier):
             params.append((scale * jax.random.normal(sub, (sizes[i], sizes[i + 1])),
                            jnp.zeros((sizes[i + 1],))))
 
-        def forward(params, x):
-            h = x
-            for (w, b) in params[:-1]:
-                h = jax.nn.relu(h @ w + b)
-            w, b = params[-1]
-            return h @ w + b
-
         def loss(params):
-            logits = forward(params, x)
+            logits = _mlp_forward(params, x)
             ce = -jnp.take_along_axis(jax.nn.log_softmax(logits),
                                       yj[:, None], axis=1).mean()
             l2 = sum((w ** 2).sum() for (w, _) in params)
             return ce + p["alpha"] * l2
 
         self.params_ = _adam_train(loss, params, p["steps"], p["lr"])
-        self._forward = forward
         return self
 
+    def forward_jnp(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Logits for an on-device (B, d) batch."""
+        return _mlp_forward(self.params_, x)
+
     def predict_proba(self, x):
-        logits = self._forward(self.params_, jnp.asarray(x, dtype=jnp.float32))
+        logits = self.forward_jnp(jnp.asarray(x, dtype=jnp.float32))
         return np.asarray(jax.nn.softmax(logits, axis=1))
 
     def predict(self, x):

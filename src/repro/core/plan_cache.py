@@ -1,0 +1,76 @@
+"""LRU plan cache for the selection serving path.
+
+Reordering selection is a pure function of the sparsity *structure*, so
+repeat structures (the common case under heavy traffic: the same mesh
+refactored each timestep, the same circuit re-solved per corner) should skip
+both featurization and inference. Keys are a structure fingerprint —
+``(n, nnz, blake2b(indptr ‖ indices))`` — values are whatever plan the
+caller stores (algorithm name here; a full execution plan later).
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.sparse.csr import CSRMatrix
+
+__all__ = ["matrix_fingerprint", "PlanCache"]
+
+
+def matrix_fingerprint(a: CSRMatrix) -> str:
+    """Structure fingerprint: n, nnz, and a hash of the CSR index buffers.
+
+    Values (``a.data``) are deliberately excluded — ordering depends only on
+    the pattern, so numerically-different instances of one structure share a
+    cache entry.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.int64(a.n).tobytes())
+    h.update(np.int64(a.nnz).tobytes())
+    h.update(np.ascontiguousarray(a.indptr, dtype=np.int32).tobytes())
+    h.update(np.ascontiguousarray(a.indices, dtype=np.int32).tobytes())
+    return h.hexdigest()
+
+
+class PlanCache:
+    """Bounded LRU mapping fingerprint → plan, with hit/miss accounting."""
+
+    def __init__(self, capacity: int = 4096):
+        assert capacity >= 1
+        self.capacity = capacity
+        self._store: "OrderedDict[str, Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._store
+
+    def get(self, key: str) -> Optional[Any]:
+        if key in self._store:
+            self._store.move_to_end(key)
+            self.hits += 1
+            return self._store[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: str, plan: Any) -> None:
+        if key in self._store:
+            self._store.move_to_end(key)
+        self._store[key] = plan
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+            self.evictions += 1
+
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return dict(size=len(self._store), capacity=self.capacity,
+                    hits=self.hits, misses=self.misses,
+                    evictions=self.evictions,
+                    hit_rate=self.hits / total if total else 0.0)

@@ -4,6 +4,11 @@
 name. ``fit_from_dataset`` trains it from a :class:`LabeledDataset`;
 ``select``/``predict_matrix`` run the trained pipeline on a new matrix
 (the ~16 ms path of the paper's Table 5).
+
+``select_batch`` is the serving path: many matrices at once, either through
+the host featurizer or the CSR-native device featurizer
+(`extract_features_batch_jnp`); for the JAX members of the model zoo the
+scaler transform and classifier forward also run on device inside one jit.
 """
 from __future__ import annotations
 
@@ -13,14 +18,31 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.features import extract_features
+from repro.core.features import (extract_features, extract_features_batch,
+                                 extract_features_batch_jnp, pad_csr_batch)
 from repro.core.labeling import LabeledDataset
 from repro.core.ml import MODEL_ZOO, BaseClassifier, accuracy_score
 from repro.core.model_selection import GridSearchCV, train_test_split
 from repro.core.scaling import SCALERS
 from repro.sparse.csr import CSRMatrix
 
-__all__ = ["ReorderSelector", "DEFAULT_GRIDS", "train_selector"]
+__all__ = ["ReorderSelector", "DEFAULT_GRIDS", "train_selector",
+           "scaler_transform_jnp"]
+
+
+def scaler_transform_jnp(scaler, x):
+    """Device twin of ``scaler.transform`` — reads the fitted state and
+    applies the affine map in jnp so it fuses into the inference jit."""
+    import jax.numpy as jnp
+
+    st = scaler.state()
+    if "mean" in st:
+        return ((x - jnp.asarray(st["mean"], jnp.float32))
+                / jnp.asarray(st["std"], jnp.float32))
+    if "min" in st:
+        return ((x - jnp.asarray(st["min"], jnp.float32))
+                / jnp.asarray(st["scale"], jnp.float32))
+    return x
 
 
 # Hyperparameter grids per model family (paper §3.4: "candidate values are
@@ -68,10 +90,74 @@ class ReorderSelector:
         idx = int(self.predict_features(feats)[0])
         return self.algorithms[idx], time.perf_counter() - t0
 
+    # -- batched serving path --------------------------------------------------
+    def select_batch(self, mats: Sequence[CSRMatrix], *, path: str = "host",
+                     use_pallas: bool = False
+                     ) -> Tuple[List[str], float]:
+        """Select for a whole batch at once; returns (names, total seconds).
+
+        ``path='host'`` runs the per-matrix numpy featurizer; ``'device'``
+        packs the batch into padded CSR buffers and runs the segment-reduction
+        featurizer (optionally through the Pallas csr_stats kernels). JAX
+        classifiers then consume the feature batch without leaving device.
+        """
+        assert path in ("host", "device"), path
+        t0 = time.perf_counter()
+        if path == "device":
+            feats = extract_features_batch_jnp(
+                pad_csr_batch(mats, bucket=True), use_pallas=use_pallas)
+            idx = self._predict_device(feats)
+        else:
+            idx = self.predict_features(extract_features_batch(mats))
+        names = [self.algorithms[int(i)] for i in idx]
+        return names, time.perf_counter() - t0
+
+    def _fit_version(self) -> tuple:
+        """Identity of the fitted state the device jit bakes in as constants.
+
+        Refitting model or scaler assigns fresh arrays, so object ids of the
+        fitted attributes change and the cached trace is invalidated."""
+        import jax
+
+        fitted = {k: v for k, v in vars(self.model).items()
+                  if k.endswith("_")}
+        leaves = jax.tree_util.tree_leaves(fitted)
+        leaves += list(self.scaler.state().values())
+        return tuple(id(x) for x in leaves)
+
+    def _predict_device(self, feats) -> np.ndarray:
+        """Label indices for an on-device (B, 12) feature batch.
+
+        JAX zoo members (scores via ``forward_jnp``) stay on device —
+        scaler + forward + argmax in one cached jit (rebuilt if the model
+        or scaler is refit). Tree/ensemble models fall back to host
+        inference on the transferred features.
+        """
+        if hasattr(self.model, "forward_jnp"):
+            version = self._fit_version()
+            fn = getattr(self, "_device_fn", None)
+            if fn is None or getattr(self, "_device_fn_version", None) != version:
+                import jax
+                import jax.numpy as jnp
+
+                def infer(x):
+                    z = scaler_transform_jnp(self.scaler, x)
+                    return jnp.argmax(self.model.forward_jnp(z), axis=1)
+
+                fn = self._device_fn = jax.jit(infer)
+                self._device_fn_version = version
+            return np.asarray(fn(feats))
+        return self.model.predict(self.scaler.transform(np.asarray(feats)))
+
     def accuracy(self, feats: np.ndarray, labels: np.ndarray) -> float:
         return accuracy_score(labels, self.predict_features(feats))
 
     # -- persistence -----------------------------------------------------------
+    def __getstate__(self):
+        # jitted device closures are not picklable; rebuilt lazily on load
+        return {k: v for k, v in self.__dict__.items()
+                if not k.startswith("_")}
+
     def save(self, path: str) -> None:
         with open(path, "wb") as f:
             pickle.dump(self, f)

@@ -191,6 +191,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         ma = compiled.memory_analysis()
         print(ma)                      # proves it fits
         ca = compiled.cost_analysis()
+        if isinstance(ca, list):       # older JAX: one dict per device
+            ca = ca[0] if ca else {}
         print({k: ca[k] for k in ("flops", "bytes accessed")
                if k in ca})           # FLOPs/bytes for §Roofline
         hlo = analyze_hlo(compiled.as_text())

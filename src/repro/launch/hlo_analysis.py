@@ -35,6 +35,11 @@ _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _OPERAND_RE = re.compile(r"[\(,]\s*%?([\w.\-]+)")
+# Operand entry with an optional inline type annotation, e.g.
+#   dot(f32[64,128]{1,0} %lhs, f32[128,128]{1,0} %rhs)
+# Newer XLA text inlines operand types; older text is name-only.
+_OPERAND_TYPED_RE = re.compile(
+    r"(?:([a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})?)\s+)?%([\w.\-]+)")
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
@@ -153,11 +158,24 @@ def analyze_hlo(text: str) -> HloStats:
     coll_counts: Dict[str, float] = defaultdict(float)
     counters = dict(n_while=0, unknown=0)
 
-    def operand_names(rhs: str, kind: str) -> List[str]:
+    def operand_types(rhs: str, kind: str, table: Dict[str, str]) -> List[str]:
+        """Resolved type strings of an op's operands.
+
+        Prefers the inline type annotation when the text format carries one
+        (``dot(f32[64,128]{1,0} %lhs, ...)``); falls back to the computation
+        symbol table for name-only formats. Without this, the name regex used
+        to match the *type* token ("f32") as an operand name, so shape
+        lookups came back empty and dot contraction dims collapsed to 1.
+        """
         inner = rhs.split(kind + "(", 1)[1] if kind + "(" in rhs else ""
         # cut at the closing paren of the operand list (operands hold no parens)
         inner = inner.split(")")[0]
-        return [m.group(1) for m in _OPERAND_RE.finditer("(" + inner)]
+        typed = _OPERAND_TYPED_RE.findall(inner)
+        if typed:
+            return [t if t else table.get(name, "") for t, name in typed]
+        # name-only dialect without % prefixes
+        return [table.get(m.group(1), "")
+                for m in _OPERAND_RE.finditer("(" + inner)]
 
     def walk(comp: str, mult: float, depth: int):
         if comp not in comps or depth > 64:
@@ -185,10 +203,10 @@ def analyze_hlo(text: str) -> HloStats:
                 for d in rdims:
                     rn *= d
                 contract = 1
-                ops_ = operand_names(op.rhs, "dot")
+                otypes = operand_types(op.rhs, "dot", table)
                 cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rhs)
-                if ops_ and cdims and cdims.group(1):
-                    ldims = _first_dims(table.get(ops_[0], ""))
+                if otypes and cdims and cdims.group(1):
+                    ldims = _first_dims(otypes[0])
                     for ci in cdims.group(1).split(","):
                         ci = int(ci)
                         if ci < len(ldims):
@@ -199,22 +217,22 @@ def analyze_hlo(text: str) -> HloStats:
                 # matmul-boundary HBM traffic: lhs + rhs + result bytes
                 # (the fusion-safe floor of true traffic — see §Roofline)
                 db = _shape_bytes(op.result_type)
-                for oname in ops_:
-                    db += _shape_bytes(table.get(oname, ""))
+                for otype in otypes:
+                    db += _shape_bytes(otype)
                 stats["dot_bytes"] += mult * db
             if op.kind in _COLLECTIVES:
                 b = _shape_bytes(op.result_type)
                 if op.kind == "reduce-scatter":
-                    ops_ = operand_names(op.rhs, op.kind)
-                    if ops_:
-                        b = _shape_bytes(table.get(ops_[0], op.result_type))
+                    otypes = operand_types(op.rhs, op.kind, table)
+                    if otypes and otypes[0]:
+                        b = _shape_bytes(otypes[0])
                 factor = 2.0 if op.kind == "all-reduce" else 1.0
                 coll_bytes[op.kind] += mult * factor * b
                 coll_counts[op.kind] += mult
             if op.kind in _MEM_OPS:
                 b = _shape_bytes(op.result_type)
-                for oname in operand_names(op.rhs, op.kind):
-                    b += _shape_bytes(table.get(oname, ""))
+                for otype in operand_types(op.rhs, op.kind, table):
+                    b += _shape_bytes(otype)
                 stats["touched"] += mult * b
                 noloop["touched"] += b
 

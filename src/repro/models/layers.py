@@ -178,6 +178,8 @@ def sharded_decode_attention(q, ck, cv, k_new, v_new, pos, *, mesh,
     """
     from jax.sharding import PartitionSpec as P
 
+    from repro.distributed.compat import shard_map
+
     axes = seq_axes if isinstance(seq_axes, tuple) else (seq_axes,)
 
     def local(q, ck, cv, kn, vn, pos):
@@ -218,7 +220,7 @@ def sharded_decode_attention(q, ck, cv, k_new, v_new, pos, *, mesh,
         return out.reshape(b, hq, 1, hd).astype(q.dtype), ck, cv
 
     cache_spec = P(None, None, seq_axes, None)
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(), cache_spec, cache_spec, P(), P(), P()),
         out_specs=(P(), cache_spec, cache_spec), check_vma=False,

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import shard_map
 from repro.distributed.meshctx import get_mesh_context
 from repro.models.config import ModelConfig
 
@@ -200,7 +201,7 @@ def moe_ffn(params: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig
         fn = wrap(lambda *a: _local_moe(
             *a, k=k, num_experts=e, model_axis=ctx.model_axis))
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         fn, mesh=ctx.mesh, in_specs=in_specs,
         out_specs=(P(batch_axes, None), P()), check_vma=False,
     )(xf, params["router"], params["wg"], params["wu"], params["wd"])

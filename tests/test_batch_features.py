@@ -1,0 +1,179 @@
+"""Serving-path coverage: CSR-native batched featurizer vs host oracle,
+batched selector inference, and the fingerprint plan cache."""
+import numpy as np
+import pytest
+
+from repro.core.features import (FEATURE_NAMES, extract_features,
+                                 extract_features_batch,
+                                 extract_features_batch_jnp, pad_csr_batch)
+from repro.core.ml import MODEL_ZOO
+from repro.core.plan_cache import PlanCache, matrix_fingerprint
+from repro.core.scaling import StandardScaler
+from repro.core.selector import ReorderSelector
+from repro.sparse.csr import CSRMatrix, coo_to_csr, make_spd
+
+
+def _random_csr(rng, n, density) -> CSRMatrix:
+    mask = rng.random((n, n)) < density
+    rows, cols = np.nonzero(mask)
+    if rows.size == 0:
+        rows, cols = np.array([0]), np.array([0])
+    return make_spd(coo_to_csr(rows, cols, np.ones(rows.size), (n, n)))
+
+
+def _edge_cases():
+    diag = coo_to_csr(np.arange(7), np.arange(7), np.ones(7), (7, 7))
+    # empty rows: only rows 0 and 4 have (off-diagonal) entries
+    sparse_rows = coo_to_csr(np.array([0, 0, 4]), np.array([1, 3, 2]),
+                             np.ones(3), (6, 6))
+    one = coo_to_csr(np.array([0]), np.array([0]), np.ones(1), (1, 1))
+    # structurally unsymmetric pattern (exercises the reciprocal search)
+    unsym = coo_to_csr(np.array([0, 1, 2, 2]), np.array([2, 0, 1, 3]),
+                       np.ones(4), (5, 5))
+    return [diag, sparse_rows, one, unsym]
+
+
+@pytest.fixture(scope="module")
+def ragged_batch():
+    """≥16 random CSR matrices of ragged sizes plus structural edge cases."""
+    rng = np.random.default_rng(0)
+    mats = [_random_csr(rng, int(n), float(d))
+            for n, d in zip(rng.integers(2, 120, size=14),
+                            rng.uniform(0.02, 0.4, size=14))]
+    return mats + _edge_cases()
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_batch_jnp_matches_host(ragged_batch, use_pallas):
+    """Acceptance: all 12 features within 1e-4 relative of the host path,
+    with no dense (n, n) materialization (inputs are CSR buffers only)."""
+    assert len(ragged_batch) >= 16
+    host = np.stack([extract_features(m) for m in ragged_batch])
+    dev = np.asarray(extract_features_batch_jnp(
+        pad_csr_batch(ragged_batch), use_pallas=use_pallas))
+    assert dev.shape == (len(ragged_batch), len(FEATURE_NAMES))
+    np.testing.assert_allclose(dev, host, rtol=1e-4, atol=1e-5)
+
+
+def test_batch_jnp_bucketed_padding_invariant(ragged_batch):
+    """Extra pow2 padding must not change any feature value."""
+    tight = np.asarray(extract_features_batch_jnp(pad_csr_batch(ragged_batch)))
+    padded = np.asarray(extract_features_batch_jnp(
+        pad_csr_batch(ragged_batch, bucket=True)))
+    np.testing.assert_allclose(padded, tight, rtol=1e-6)
+
+
+def test_pad_csr_batch_layout(ragged_batch):
+    b = pad_csr_batch(ragged_batch)
+    nmax = max(m.n for m in ragged_batch)
+    emax = max(m.nnz for m in ragged_batch)
+    assert b.indptr.shape == (len(ragged_batch), nmax + 1)
+    assert b.indices.shape == (len(ragged_batch), emax)
+    for i, m in enumerate(ragged_batch):
+        assert b.n[i] == m.n and b.nnz[i] == m.nnz
+        # rows past n padded with nnz → padded row lengths are 0
+        assert (np.diff(b.indptr[i])[m.n:] == 0).all()
+
+
+@pytest.fixture(scope="module")
+def tiny_selector(ragged_batch):
+    """Selector trained directly on features (no labeling campaign) with a
+    JAX-zoo model, so the device inference path is exercised."""
+    feats = extract_features_batch(ragged_batch)
+    labels = (feats[:, FEATURE_NAMES.index("bandwidth")]
+              / np.maximum(feats[:, 0], 1) > 0.5).astype(int)
+    scaler = StandardScaler().fit(feats)
+    model = MODEL_ZOO["logistic_regression"](steps=200)
+    model.fit(scaler.transform(feats), labels)
+    return ReorderSelector(model, scaler, ["amd", "rcm"])
+
+
+def test_select_batch_paths_agree(tiny_selector, ragged_batch):
+    names_host, _ = tiny_selector.select_batch(ragged_batch, path="host")
+    names_dev, _ = tiny_selector.select_batch(ragged_batch, path="device")
+    names_pl, _ = tiny_selector.select_batch(ragged_batch, path="device",
+                                             use_pallas=True)
+    singles = [tiny_selector.select(m)[0] for m in ragged_batch]
+    assert names_host == singles
+    assert names_dev == names_host
+    assert names_pl == names_host
+
+
+def test_select_batch_host_model_device_features(ragged_batch, tiny_selector):
+    """Non-JAX zoo members still accept device features (host inference)."""
+    feats = extract_features_batch(ragged_batch)
+    labels = np.asarray([0, 1] * (len(ragged_batch) // 2 + 1))[
+        : len(ragged_batch)]
+    model = MODEL_ZOO["decision_tree"](max_depth=4)
+    model.fit(tiny_selector.scaler.transform(feats), labels)
+    sel = ReorderSelector(model, tiny_selector.scaler, ["amd", "rcm"])
+    nh, _ = sel.select_batch(ragged_batch, path="host")
+    nd, _ = sel.select_batch(ragged_batch, path="device")
+    assert nh == nd
+
+
+def test_profile_no_int32_overflow():
+    """A tall first-column pattern drives profile past 2^31; the device sum
+    must accumulate in f32, not wrap in int32."""
+    n = 80_000  # profile = n(n-1)/2 ≈ 3.2e9 > 2^31
+    rows = np.concatenate([np.arange(n), np.arange(n)])
+    cols = np.concatenate([np.zeros(n, np.int64), np.arange(n)])
+    m = coo_to_csr(rows, cols, np.ones(rows.size), (n, n))
+    host = extract_features(m)
+    dev = np.asarray(extract_features_batch_jnp(pad_csr_batch([m])))[0]
+    i = FEATURE_NAMES.index("profile")
+    assert host[i] == n * (n - 1) / 2
+    np.testing.assert_allclose(dev[i], host[i], rtol=1e-4)
+    assert dev[i] > 0
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_is_structural(ragged_batch):
+    m = ragged_batch[0]
+    twin = m.copy()
+    if twin.data is not None:
+        twin.data = twin.data * 3.0  # same structure, different values
+    assert matrix_fingerprint(twin) == matrix_fingerprint(m)
+    keys = {matrix_fingerprint(x) for x in ragged_batch}
+    assert len(keys) == len(ragged_batch)  # distinct structures → distinct
+
+
+def test_plan_cache_hit_miss_eviction():
+    c = PlanCache(capacity=2)
+    assert c.get("a") is None          # miss
+    c.put("a", "amd")
+    assert c.get("a") == "amd"         # hit
+    c.put("b", "rcm")
+    c.put("c", "nd")                   # evicts LRU ("a": b was put later,
+    assert c.get("a") is None          # and "a" unused since)
+    assert c.get("b") == "rcm"
+    c.put("d", "amd")                  # "c" is now LRU → evicted
+    assert c.get("c") is None
+    assert c.get("b") == "rcm"         # survived: recently used
+    s = c.stats()
+    assert s["evictions"] == 2 and s["size"] == 2
+    assert s["hits"] == 3 and s["misses"] == 3
+    assert 0.0 < s["hit_rate"] < 1.0
+
+
+def test_selector_server_batches_and_caches(tiny_selector, ragged_batch):
+    from repro.launch.serve_selector import SelectorServer
+
+    server = SelectorServer(tiny_selector, batch_size=4, cache_capacity=64,
+                            path="device")
+    want, _ = tiny_selector.select_batch(ragged_batch, path="device")
+    # duplicates within one request batch are featurized once
+    req = list(ragged_batch) + [ragged_batch[0], ragged_batch[3]]
+    plans = server.handle(req)
+    assert plans[: len(ragged_batch)] == want
+    assert plans[-2] == want[0] and plans[-1] == want[3]
+    assert server.cache.stats()["misses"] == len(ragged_batch) + 2
+    # repeat request: all hits, no extra selector work
+    before = server.select_seconds
+    plans2 = server.handle(list(ragged_batch))
+    assert plans2 == want
+    assert server.select_seconds == before
+    assert server.cache.stats()["hits"] >= len(ragged_batch)

@@ -83,6 +83,7 @@ def test_grad_compression_close_to_exact():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np, functools
         from jax.sharding import PartitionSpec as P
+        from repro.distributed.compat import shard_map
         from repro.distributed.gradient_compression import (compressed_psum,
             init_error_state)
         mesh = jax.make_mesh((8,), ("data",))
@@ -93,7 +94,7 @@ def test_grad_compression_close_to_exact():
             mean, new_err = compressed_psum({'w': gs[0]}, {'w': err[0]},
                                             'data')
             return mean['w'], new_err['w'][None]
-        f2 = jax.jit(jax.shard_map(local2, mesh=mesh,
+        f2 = jax.jit(shard_map(local2, mesh=mesh,
                 in_specs=(P('data', None, None), P('data', None, None)),
                 out_specs=(P(), P('data', None, None))))
         err = jnp.zeros((8, 64, 32))
