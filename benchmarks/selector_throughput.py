@@ -1,16 +1,27 @@
-"""Selection serving throughput: host vs device featurizer paths.
+"""Selection serving benchmarks: featurizer throughput and end-to-end plans.
 
     PYTHONPATH=src python -m benchmarks.selector_throughput [--use-pallas]
+    PYTHONPATH=src python -m benchmarks.selector_throughput --mode e2e
 
-Reports matrices/sec for ``ReorderSelector.select_batch`` at batch sizes
-1/8/64 on the host (per-matrix numpy) path and the device (CSR-native
-padded-batch) path. The device path amortizes dispatch and jit overhead
-across the batch — the spread between batch=1 and batch=64 is the argument
-for request batching in ``repro.launch.serve_selector``.
+``--mode throughput`` (default) reports matrices/sec for
+``ReorderSelector.select_batch`` at batch sizes 1/8/64 on the host
+(per-matrix numpy) path and the device (CSR-native padded-batch) path. The
+device path amortizes dispatch and jit overhead across the batch — the
+spread between batch=1 and batch=64 is the argument for request batching in
+``repro.launch.serve_selector``.
+
+``--mode e2e`` measures the full request lifecycle — select + reorder +
+symbolic + numeric solve — through the :class:`ExecutionPlan` pipeline,
+cold (empty two-tier plan cache: every stage runs) vs. warm (every
+structure cached: fingerprint → plan → numeric solve only), and reports
+cache hit rate and p50/p99 per-request latency alongside matrices/sec.
+The warm/cold gap is the payoff of caching *plans* instead of algorithm
+names.
 """
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
 import numpy as np
@@ -21,6 +32,8 @@ except ImportError:  # run as a loose script: benchmarks/ on sys.path
     from common import ART
 
 from repro.core.labeling import load_or_build
+from repro.core.plan import PlanBuilder, execute_plan
+from repro.core.plan_cache import TwoTierPlanCache
 from repro.core.selector import train_selector
 from repro.sparse.dataset import generate_suite
 
@@ -48,11 +61,85 @@ def bench_path(sel, mats, bs: int, path: str, use_pallas: bool,
     return bs * len(batches) / best
 
 
+def _pct(lat, q):
+    return float(np.percentile(np.asarray(lat) * 1e3, q))
+
+
+def bench_e2e(sel, mats, path: str, use_pallas: bool, batch: int,
+              repeats: int = 2) -> None:
+    """Cold vs. warm per-request latency through the ExecutionPlan pipeline.
+
+    Each request = plan the structure, then numerically factor+solve with
+    it. Cold requests pay select + reorder + symbolic + numeric; warm
+    requests (same structures, fresh values) pay fingerprint + numeric
+    only. A fresh temp dir keeps the cold pass honest across runs.
+    """
+    rng = np.random.default_rng(0)
+    with tempfile.TemporaryDirectory(prefix="plan_cache_bench_") as d:
+        builder = PlanBuilder(sel, TwoTierPlanCache(4 * len(mats), d),
+                              path=path, use_pallas=use_pallas,
+                              batch_size=batch)
+        # jit warm-up outside the timed region: per-request selection over
+        # the whole pool compiles every padded shape bucket exactly as the
+        # cold pass will hit them (one matrix per micro-batch), so the
+        # cold/warm gap measures the plan cache, not jit compiles; then
+        # reset the selection counters so the report reflects serving
+        for m in mats:
+            builder.select_names([m])
+        builder.reset_stats()
+
+        def run_pass():
+            lats, solves = [], []
+            for m in mats:
+                q = m.copy()  # fresh numeric values, same structure
+                q.data = q.data * float(rng.uniform(0.5, 2.0))
+                b = rng.standard_normal(m.n)
+                t0 = time.perf_counter()
+                plan = builder.plan_batch([q])[0]
+                res = execute_plan(q, plan, b)
+                lats.append(time.perf_counter() - t0)
+                solves.append(res["time"])
+            return lats, solves
+
+        cold_lat, cold_solve = run_pass()
+        warm_lat, warm_solve = [], []
+        for _ in range(repeats):  # every warm measurement is aggregated
+            lat, solve = run_pass()
+            warm_lat += lat
+            warm_solve += solve
+
+        s = builder.stats()
+        print("pass,requests,mean_ms,p50_ms,p99_ms,matrices_per_sec")
+        for tag, lat in (("cold", cold_lat), ("warm", warm_lat)):
+            print(f"{tag},{len(lat)},{1e3*np.mean(lat):.2f},"
+                  f"{_pct(lat, 50):.2f},{_pct(lat, 99):.2f},"
+                  f"{len(lat)/sum(lat):.1f}")
+        print(f"# cache: hit_rate {s['hit_rate']:.2f} "
+              f"({s['hits']} hits / {s['misses']} misses, "
+              f"disk entries {s['disk_entries']}), "
+              f"{s['plans_built']} plans built, "
+              f"select {s['select_seconds']*1e3:.0f} ms, "
+              f"build {s['build_seconds']*1e3:.0f} ms")
+        print(f"# total request time: cold {1e3*sum(cold_lat):.0f} ms vs "
+              f"warm {1e3*sum(warm_lat):.0f} ms; numeric solve share "
+              f"cold {sum(cold_solve)/max(sum(cold_lat), 1e-12):.2f} vs "
+              f"warm {sum(warm_solve)/max(sum(warm_lat), 1e-12):.2f}")
+        speedup = np.mean(cold_lat) / max(np.mean(warm_lat), 1e-12)
+        verdict = "OK" if np.mean(warm_lat) < np.mean(cold_lat) else "FAIL"
+        print(f"# warm below cold: {verdict} "
+              f"(mean {1e3*np.mean(cold_lat):.2f} ms → "
+              f"{1e3*np.mean(warm_lat):.2f} ms, {speedup:.1f}x)")
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
+    p.add_argument("--mode", choices=["throughput", "e2e"],
+                   default="throughput")
     p.add_argument("--use-pallas", action="store_true",
                    help="route device reductions through the Pallas kernels")
     p.add_argument("--pool", type=int, default=64)
+    p.add_argument("--batch", type=int, default=8,
+                   help="selector micro-batch size in e2e mode")
     p.add_argument("--model", default="logistic_regression")
     args = p.parse_args()
 
@@ -65,6 +152,9 @@ def main() -> None:
     print(f"# pool: {len(mats)} matrices, n∈[{min(m.n for m in mats)}, "
           f"{max(m.n for m in mats)}], nnz_max "
           f"{max(m.nnz for m in mats)}")
+    if args.mode == "e2e":
+        bench_e2e(sel, mats, "device", args.use_pallas, args.batch)
+        return
     print("path,batch,matrices_per_sec")
     for path in ("host", "device"):
         for bs in BATCH_SIZES:

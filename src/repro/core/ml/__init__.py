@@ -1,6 +1,8 @@
 """The seven model families of the paper's Fig. 4, implemented from scratch."""
 from .base import BaseClassifier, accuracy_score
 from .decision_tree import DecisionTreeClassifier
+from .forest_jnp import (ForestArrays, forest_forward_jnp, forest_to_arrays,
+                         tree_to_arrays)
 from .jax_models import LogisticRegression, MLPClassifier, SVMClassifier
 from .knn import KNeighborsClassifier
 from .naive_bayes import GaussianNB
@@ -20,4 +22,6 @@ __all__ = [
     "BaseClassifier", "accuracy_score", "DecisionTreeClassifier",
     "RandomForestClassifier", "LogisticRegression", "SVMClassifier",
     "MLPClassifier", "GaussianNB", "KNeighborsClassifier", "MODEL_ZOO",
+    "ForestArrays", "tree_to_arrays", "forest_to_arrays",
+    "forest_forward_jnp",
 ]

@@ -120,3 +120,9 @@ class DecisionTreeClassifier(BaseClassifier):
 
     def predict(self, x: np.ndarray) -> np.ndarray:
         return self.predict_proba(x).argmax(axis=1)
+
+    def forward_jnp(self, x):
+        """Device scores (B, k): leaf probabilities via flattened-node
+        traversal (:mod:`repro.core.ml.forest_jnp`); jit-traceable."""
+        from .forest_jnp import forest_forward
+        return forest_forward(self, x)

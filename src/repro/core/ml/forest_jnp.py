@@ -1,0 +1,160 @@
+"""Device-side decision-tree / random-forest inference.
+
+The zoo's strongest models (Fig. 4's winners) are pointer-chasing CART
+trees — useless on an accelerator as-is. This module flattens a fitted
+tree into dense node arrays (feature, threshold, left, right, leaf
+probabilities) and evaluates a whole forest on a feature batch with
+``jnp.take``-based level traversal: every sample in every tree descends one
+level per step, leaves self-loop, and after ``depth`` steps each sample
+sits at its leaf. No host transfer, no Python recursion — the traversal is
+a ``lax.fori_loop`` of gathers, vmapped over trees, so it fuses into the
+selector's inference jit next to the scaler transform.
+
+Numerics: thresholds and leaf probabilities are evaluated in float32
+(device default). Fully-grown CART leaves are pure, so forest votes are
+small exact integers and the argmax agrees with the float64 host path; a
+sample within float32 epsilon of a split threshold may route differently,
+which is measure-zero for continuous features.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple
+
+import numpy as np
+
+__all__ = ["ForestArrays", "tree_to_arrays", "forest_to_arrays",
+           "forest_forward_jnp", "forest_forward"]
+
+
+class ForestArrays(NamedTuple):
+    """Flattened forest: ``(T, N)`` node arrays padded to the widest tree.
+
+    ``left``/``right`` are in-tree node indices; leaves (and padding) point
+    at themselves so extra traversal steps are no-ops. ``value`` holds the
+    normalized class distribution of each node's training samples (only
+    leaf rows are ever gathered).
+    """
+
+    feature: np.ndarray    # (T, N) int32
+    threshold: np.ndarray  # (T, N) float32
+    left: np.ndarray       # (T, N) int32
+    right: np.ndarray      # (T, N) int32
+    value: np.ndarray      # (T, N, k) float32
+    depth: int             # max levels over all trees (python int: static)
+
+
+def tree_to_arrays(root, n_classes: int):
+    """DFS-flatten one linked `_Node` tree into parallel lists.
+
+    Returns (feature, threshold, left, right, value, depth) python lists —
+    the forest packer pads and stacks them.
+    """
+    feats: List[int] = []
+    thrs: List[float] = []
+    lefts: List[int] = []
+    rights: List[int] = []
+    values: List[np.ndarray] = []
+    depth = 0
+    # explicit stack: grid-search trees can outgrow Python's recursion limit
+    stack = [(root, None, False, 0)]  # (node, parent_idx, is_right, level)
+    while stack:
+        node, parent, is_right, level = stack.pop()
+        i = len(feats)
+        depth = max(depth, level)
+        is_leaf = node.left is None
+        feats.append(0 if is_leaf else node.feature)
+        thrs.append(np.inf if is_leaf else node.threshold)
+        lefts.append(i)   # self-loop; patched below for internal nodes
+        rights.append(i)
+        val = np.asarray(node.value, dtype=np.float64)
+        assert val.shape == (n_classes,), (val.shape, n_classes)
+        values.append(val / max(float(val.sum()), 1.0))
+        if parent is not None:
+            (rights if is_right else lefts)[parent] = i
+        if not is_leaf:
+            # push right first so left is visited (and indexed) first
+            stack.append((node.right, i, True, level + 1))
+            stack.append((node.left, i, False, level + 1))
+    return feats, thrs, lefts, rights, values, depth
+
+
+def forest_to_arrays(trees, n_classes: int) -> ForestArrays:
+    """Pack fitted trees (objects with ``root_``) into one padded stack."""
+    flat = [tree_to_arrays(t.root_, n_classes) for t in trees]
+    nmax = max(len(f[0]) for f in flat)
+    T = len(flat)
+    feature = np.zeros((T, nmax), dtype=np.int32)
+    threshold = np.full((T, nmax), np.inf, dtype=np.float32)
+    left = np.tile(np.arange(nmax, dtype=np.int32), (T, 1))
+    right = left.copy()
+    value = np.zeros((T, nmax, n_classes), dtype=np.float32)
+    depth = 0
+    for t, (f, th, lf, rg, vals, d) in enumerate(flat):
+        m = len(f)
+        feature[t, :m] = f
+        threshold[t, :m] = th
+        left[t, :m] = lf
+        right[t, :m] = rg
+        value[t, :m] = np.stack(vals)
+        depth = max(depth, d)
+    return ForestArrays(feature, threshold, left, right, value, depth)
+
+
+def forest_forward_jnp(fa: ForestArrays, x):
+    """Mean leaf probabilities ``(B, k)`` for a ``(B, d)`` feature batch.
+
+    Level-synchronous traversal: ``node[b]`` descends one edge per step via
+    three gathers (feature, threshold, child), vmapped over the tree axis.
+    Traceable under jit; ``fa`` arrays become constants of the trace.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.asarray(x, jnp.float32)
+    feature = jnp.asarray(fa.feature)
+    threshold = jnp.asarray(fa.threshold)
+    left = jnp.asarray(fa.left)
+    right = jnp.asarray(fa.right)
+    value = jnp.asarray(fa.value)
+
+    def one_tree(feat, thr, lft, rgt, val):
+        def body(_, node):
+            f = jnp.take(feat, node)                       # (B,)
+            t = jnp.take(thr, node)
+            xv = jnp.take_along_axis(x, f[:, None], axis=1)[:, 0]
+            return jnp.where(xv <= t, jnp.take(lft, node),
+                             jnp.take(rgt, node))
+
+        node0 = jnp.zeros(x.shape[0], jnp.int32)
+        node = jax.lax.fori_loop(0, fa.depth, body, node0)
+        return jnp.take(val, node, axis=0)                 # (B, k)
+
+    probs = jax.vmap(one_tree)(feature, threshold, left, right, value)
+    return probs.mean(axis=0)
+
+
+def _cached_arrays(model, trees) -> ForestArrays:
+    """Flatten once per fit: keyed on the identity of the fitted roots.
+
+    The key holds strong references to the root nodes (not their ``id``s):
+    a refit frees the old roots, and a reallocated node could otherwise
+    reuse an address and alias the stale arrays.
+    """
+    key = tuple(t.root_ for t in trees)
+    cached = getattr(model, "_flat", None)
+    if (cached is None or len(cached[0]) != len(key)
+            or any(a is not b for a, b in zip(cached[0], key))):
+        model._flat = (key, forest_to_arrays(trees, int(model.n_classes_)))
+    return model._flat[1]
+
+
+def forest_forward(model, x):
+    """``forward_jnp`` implementation shared by the tree and forest classes.
+
+    ``model`` is a fitted ``DecisionTreeClassifier`` (``root_``) or
+    ``RandomForestClassifier`` (``trees_``).
+    """
+    trees = getattr(model, "trees_", None)
+    if trees is None:
+        trees = [model]
+    return forest_forward_jnp(_cached_arrays(model, trees), x)

@@ -60,6 +60,13 @@ class RandomForestClassifier(BaseClassifier):
     def predict(self, x: np.ndarray) -> np.ndarray:
         return self.predict_proba(x).argmax(axis=1)
 
+    def forward_jnp(self, x):
+        """Device scores (B, k): mean per-tree leaf probabilities via the
+        flattened forest (:mod:`repro.core.ml.forest_jnp`); keeps forest
+        selection on device in ``ReorderSelector.select_batch``."""
+        from .forest_jnp import forest_forward
+        return forest_forward(self, x)
+
     def feature_importances(self, x: np.ndarray, y: np.ndarray,
                             n_repeats: int = 3, seed: int = 0) -> np.ndarray:
         """Permutation importance (used by the EXPERIMENTS feature study)."""

@@ -1,15 +1,30 @@
-"""LRU plan cache for the selection serving path.
+"""Plan cache for the selection serving path: thread-safe LRU + disk tier.
 
 Reordering selection is a pure function of the sparsity *structure*, so
 repeat structures (the common case under heavy traffic: the same mesh
 refactored each timestep, the same circuit re-solved per corner) should skip
-both featurization and inference. Keys are a structure fingerprint —
-``(n, nnz, blake2b(indptr ‖ indices))`` — values are whatever plan the
-caller stores (algorithm name here; a full execution plan later).
+featurization, inference, reordering, and symbolic analysis. Keys are a
+structure fingerprint — ``(n, nnz, blake2b(indptr ‖ indices))`` — values are
+whatever plan the caller stores (a full :class:`repro.core.plan.ExecutionPlan`
+on the serving path; any picklable object works).
+
+Two classes:
+
+* :class:`PlanCache` — bounded in-memory LRU with hit/miss accounting.
+  Thread-safe: the async server shares one instance across its batcher and
+  plan-build worker threads.
+* :class:`TwoTierPlanCache` — the same LRU backed by a persistent on-disk
+  tier (one pickle per fingerprint under ``artifacts/plan_cache/`` by
+  default). Memory evictions stay recoverable from disk, and a fresh
+  process warms itself from the plans a previous one built.
 """
 from __future__ import annotations
 
 import hashlib
+import os
+import pickle
+import tempfile
+import threading
 from collections import OrderedDict
 from typing import Any, Dict, Optional
 
@@ -17,7 +32,10 @@ import numpy as np
 
 from repro.sparse.csr import CSRMatrix
 
-__all__ = ["matrix_fingerprint", "PlanCache"]
+__all__ = ["matrix_fingerprint", "PlanCache", "TwoTierPlanCache",
+           "DEFAULT_CACHE_DIR"]
+
+DEFAULT_CACHE_DIR = os.path.join("artifacts", "plan_cache")
 
 
 def matrix_fingerprint(a: CSRMatrix) -> str:
@@ -36,31 +54,66 @@ def matrix_fingerprint(a: CSRMatrix) -> str:
 
 
 class PlanCache:
-    """Bounded LRU mapping fingerprint → plan, with hit/miss accounting."""
+    """Bounded LRU mapping fingerprint → plan, with hit/miss accounting.
+
+    Thread-safe: memory-tier state is only touched under ``self._lock``
+    (reentrant), making one instance shareable across the async server's
+    worker threads; second-tier (disk) I/O deliberately runs *outside* the
+    lock so it never stalls concurrent warm-path gets.
+    """
 
     def __init__(self, capacity: int = 4096):
         assert capacity >= 1
         self.capacity = capacity
         self._store: "OrderedDict[str, Any]" = OrderedDict()
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
     def __len__(self) -> int:
-        return len(self._store)
+        with self._lock:
+            return len(self._store)
 
     def __contains__(self, key: str) -> bool:
-        return key in self._store
+        with self._lock:
+            return key in self._store
 
     def get(self, key: str) -> Optional[Any]:
-        if key in self._store:
-            self._store.move_to_end(key)
-            self.hits += 1
-            return self._store[key]
-        self.misses += 1
-        return None
+        with self._lock:
+            if key in self._store:
+                self._store.move_to_end(key)
+                self.hits += 1
+                return self._store[key]
+        # second-tier lookup runs WITHOUT the lock: disk reads must not
+        # stall concurrent warm-path gets (no-op for the memory-only cache)
+        plan = self._tier_load(key)
+        with self._lock:
+            if plan is not None:
+                self.hits += 1
+                self._tier_hit_locked()
+                self._install_locked(key, plan)
+                return plan
+            self.misses += 1
+            return None
+
+    def peek(self, key: str) -> Optional[Any]:
+        """Memory-tier lookup without touching LRU order or counters (used
+        by the async batcher's double-check, which must not skew stats)."""
+        with self._lock:
+            return self._store.get(key)
 
     def put(self, key: str, plan: Any) -> None:
+        with self._lock:
+            self._install_locked(key, plan)
+        # disk write outside the lock; the tempfile+rename below is atomic,
+        # so concurrent writers of one key are last-rename-wins safe, and
+        # a failed write degrades to memory-only caching (never fails the
+        # request whose plan is already installed above).
+        self._tier_store(key, plan)
+
+    def _install_locked(self, key: str, plan: Any) -> None:
+        """Insert into the memory LRU (caller holds the lock)."""
         if key in self._store:
             self._store.move_to_end(key)
         self._store[key] = plan
@@ -68,9 +121,118 @@ class PlanCache:
             self._store.popitem(last=False)
             self.evictions += 1
 
+    # second-tier hooks — no-ops for the memory-only cache ------------------
+    def _tier_load(self, key: str) -> Optional[Any]:
+        """Fetch from the second tier; called WITHOUT the lock held."""
+        return None
+
+    def _tier_hit_locked(self) -> None:
+        """Account a second-tier hit; called with the lock held."""
+
+    def _tier_store(self, key: str, plan: Any) -> None:
+        """Write to the second tier; called WITHOUT the lock held."""
+
+    def reset_stats(self) -> None:
+        """Zero the accounting counters (entries stay cached)."""
+        with self._lock:
+            self.hits = self.misses = self.evictions = 0
+
     def stats(self) -> Dict[str, float]:
-        total = self.hits + self.misses
-        return dict(size=len(self._store), capacity=self.capacity,
-                    hits=self.hits, misses=self.misses,
-                    evictions=self.evictions,
-                    hit_rate=self.hits / total if total else 0.0)
+        with self._lock:
+            total = self.hits + self.misses
+            return dict(size=len(self._store), capacity=self.capacity,
+                        hits=self.hits, misses=self.misses,
+                        evictions=self.evictions,
+                        hit_rate=self.hits / total if total else 0.0)
+
+
+class TwoTierPlanCache(PlanCache):
+    """Memory LRU over a persistent pickle-per-key disk tier.
+
+    ``get`` falls through memory → disk → miss; a disk hit promotes the
+    plan back into the LRU (counted in ``hits`` and ``disk_hits``, so the
+    base class's ``hit_rate`` reflects both tiers). ``put`` writes both
+    tiers; the disk write is atomic (tempfile + rename), so a plan file is
+    never observed half-written by a concurrent reader or a crashed
+    process. Disk entries outlive LRU eviction *and* the process — that is
+    the tier's entire point.
+    """
+
+    def __init__(self, capacity: int = 4096,
+                 cache_dir: str = DEFAULT_CACHE_DIR, version: str = "v0"):
+        super().__init__(capacity)
+        self.cache_dir = cache_dir
+        # plans persist across process restarts, so they outlive the model
+        # that chose them: ``version`` namespaces the disk entries, and
+        # bumping it (e.g. after retraining the served selector) makes every
+        # old entry a miss without touching other versions' files
+        self.version = version
+        os.makedirs(cache_dir, exist_ok=True)
+        self.disk_hits = 0
+        self.disk_writes = 0
+        self.disk_errors = 0
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.cache_dir, f"{key}.{self.version}.plan.pkl")
+
+    def _tier_load(self, key: str) -> Optional[Any]:
+        path = self._path(key)
+        if not os.path.exists(path):
+            return None
+        try:
+            with open(path, "rb") as f:
+                return pickle.load(f)
+        except (OSError, pickle.UnpicklingError, EOFError):
+            return None  # unreadable entry ≡ miss; next put overwrites it
+
+    def _tier_hit_locked(self) -> None:
+        self.disk_hits += 1
+
+    def _tier_store(self, key: str, plan: Any) -> None:
+        try:
+            fd, tmp = tempfile.mkstemp(dir=self.cache_dir, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "wb") as f:
+                    pickle.dump(plan, f, protocol=pickle.HIGHEST_PROTOCOL)
+                os.replace(tmp, self._path(key))
+            except BaseException:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+                raise
+        except (OSError, pickle.PicklingError):
+            # disk full / unwritable dir / unpicklable plan: the memory
+            # tier already holds the plan, so serving degrades gracefully
+            with self._lock:
+                self.disk_errors += 1
+            return
+        with self._lock:
+            self.disk_writes += 1
+
+    def _suffix(self) -> str:
+        return f".{self.version}.plan.pkl"
+
+    # disk-only maintenance: no memory-tier state involved, so no lock —
+    # holding it across a listdir/unlink sweep would stall warm-path gets
+    def disk_entries(self) -> int:
+        return sum(1 for f in os.listdir(self.cache_dir)
+                   if f.endswith(self._suffix()))
+
+    def clear_disk(self) -> None:
+        for f in os.listdir(self.cache_dir):
+            if f.endswith(self._suffix()):
+                os.unlink(os.path.join(self.cache_dir, f))
+
+    def reset_stats(self) -> None:
+        with self._lock:
+            super().reset_stats()
+            self.disk_hits = self.disk_writes = self.disk_errors = 0
+
+    def stats(self) -> Dict[str, float]:
+        entries = self.disk_entries()  # listdir outside the lock
+        with self._lock:
+            s = super().stats()
+            s.update(disk_hits=self.disk_hits, disk_writes=self.disk_writes,
+                     disk_errors=self.disk_errors,
+                     memory_hits=self.hits - self.disk_hits,
+                     disk_entries=entries)
+            return s

@@ -7,8 +7,10 @@ name. ``fit_from_dataset`` trains it from a :class:`LabeledDataset`;
 
 ``select_batch`` is the serving path: many matrices at once, either through
 the host featurizer or the CSR-native device featurizer
-(`extract_features_batch_jnp`); for the JAX members of the model zoo the
-scaler transform and classifier forward also run on device inside one jit.
+(`extract_features_batch_jnp`); for every zoo member with a ``forward_jnp``
+(the JAX models *and* the tree/forest family, via
+:mod:`repro.core.ml.forest_jnp`) the scaler transform and classifier
+forward also run on device inside one jit.
 """
 from __future__ import annotations
 
@@ -115,28 +117,39 @@ class ReorderSelector:
     def _fit_version(self) -> tuple:
         """Identity of the fitted state the device jit bakes in as constants.
 
-        Refitting model or scaler assigns fresh arrays, so object ids of the
-        fitted attributes change and the cached trace is invalidated."""
+        Refitting model or scaler assigns fresh objects, so the leaves of
+        the fitted attributes change identity and the cached trace is
+        invalidated. The version holds strong *references* (compared with
+        ``is``), never bare ``id()``s: a freed-and-reallocated object could
+        reuse an address and alias a stale trace."""
         import jax
 
         fitted = {k: v for k, v in vars(self.model).items()
                   if k.endswith("_")}
         leaves = jax.tree_util.tree_leaves(fitted)
         leaves += list(self.scaler.state().values())
-        return tuple(id(x) for x in leaves)
+        return tuple(leaves)
+
+    @staticmethod
+    def _same_version(a, b) -> bool:
+        return (a is not None and b is not None and len(a) == len(b)
+                and all(x is y for x, y in zip(a, b)))
 
     def _predict_device(self, feats) -> np.ndarray:
         """Label indices for an on-device (B, 12) feature batch.
 
-        JAX zoo members (scores via ``forward_jnp``) stay on device —
-        scaler + forward + argmax in one cached jit (rebuilt if the model
-        or scaler is refit). Tree/ensemble models fall back to host
-        inference on the transferred features.
+        Zoo members exposing ``forward_jnp`` stay on device — scaler +
+        forward + argmax in one cached jit (rebuilt if the model or scaler
+        is refit). That now includes decision trees and random forests via
+        the flattened-node traversal of :mod:`repro.core.ml.forest_jnp`,
+        so the paper's winning model serves without a host round-trip;
+        only KNN/NB fall back to host inference on transferred features.
         """
         if hasattr(self.model, "forward_jnp"):
             version = self._fit_version()
             fn = getattr(self, "_device_fn", None)
-            if fn is None or getattr(self, "_device_fn_version", None) != version:
+            if fn is None or not self._same_version(
+                    getattr(self, "_device_fn_version", None), version):
                 import jax
                 import jax.numpy as jnp
 

@@ -165,15 +165,24 @@ def multifrontal_solve(f: MultifrontalFactor, b: np.ndarray) -> np.ndarray:
 
 
 def factor_and_solve_timed(a: CSRMatrix, b: np.ndarray | None = None,
-                           relax: int = 8) -> dict:
+                           relax: int = 8,
+                           sym: Optional[SymbolicFactor] = None) -> dict:
     """Measured factor+solve wall time — the per-(matrix, ordering) label
-    signal, mirroring the paper's MUMPS timings."""
+    signal, mirroring the paper's MUMPS timings.
+
+    Passing a precomputed ``sym`` (e.g. from a cached
+    :class:`repro.core.plan.ExecutionPlan`) skips the symbolic stage
+    entirely; ``t_symbolic`` is then reported as 0.
+    """
     if b is None:
         rng = np.random.default_rng(0)
         b = rng.standard_normal(a.n)
-    t0 = time.perf_counter()
-    sym = symbolic_cholesky(a)
-    t_sym = time.perf_counter() - t0
+    if sym is None:
+        t0 = time.perf_counter()
+        sym = symbolic_cholesky(a)
+        t_sym = time.perf_counter() - t0
+    else:
+        t_sym = 0.0
     t0 = time.perf_counter()
     f = multifrontal_cholesky(a, sym)
     t_fac = time.perf_counter() - t0

@@ -40,6 +40,10 @@ class SparseCholesky:
 def sparse_cholesky(a: CSRMatrix, sym: SymbolicFactor | None = None) -> SparseCholesky:
     """Left-looking numeric factorization on the precomputed pattern.
 
+    ``sym`` may come from a cached :class:`repro.core.plan.ExecutionPlan`
+    (valid for any matrix with the plan's structure fingerprint), in which
+    case no symbolic analysis runs here — straight to numeric work.
+
     For column j:  L[j:,j] = (A[j:,j] − Σ_{k<j, L_jk≠0} L_jk · L[j:,k]) / L_jj
     The set {k : L_jk ≠ 0} is exactly the nonzeros of row j of L, which we
     accumulate with per-row lists as columns complete.

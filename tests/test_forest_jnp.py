@@ -1,0 +1,124 @@
+"""Device forest inference (`forest_jnp`) vs the host tree/forest path."""
+import numpy as np
+import pytest
+
+from repro.core.features import FEATURE_NAMES, extract_features_batch
+from repro.core.ml import (DecisionTreeClassifier, RandomForestClassifier,
+                           forest_forward_jnp, forest_to_arrays)
+from repro.core.scaling import StandardScaler
+from repro.core.selector import ReorderSelector
+from repro.sparse.dataset import generate_suite
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(42)
+    x = rng.standard_normal((240, 12))
+    y = ((x[:, 0] + 0.5 * x[:, 3] > 0).astype(int)
+         + 2 * (x[:, 5] > 0.8).astype(int))
+    return x[:160], y[:160], x[160:]
+
+
+def test_tree_flatten_invariants(data):
+    xtr, ytr, _ = data
+    tree = DecisionTreeClassifier(max_depth=6).fit(xtr, ytr)
+    fa = forest_to_arrays([tree], tree.n_classes_)
+    T, N = fa.feature.shape
+    assert T == 1 and fa.depth <= 6
+    assert fa.value.shape == (1, N, tree.n_classes_)
+    idx = np.arange(N)
+    leaves = fa.left[0] == idx
+    assert (fa.right[0][leaves] == idx[leaves]).all()  # leaves self-loop
+    assert leaves.any() and (~leaves).any()
+    # internal nodes point strictly forward (DFS order): no cycles
+    assert (fa.left[0][~leaves] > idx[~leaves]).all()
+    assert (fa.right[0][~leaves] > idx[~leaves]).all()
+
+
+def test_tree_agreement(data):
+    xtr, ytr, xte = data
+    tree = DecisionTreeClassifier().fit(xtr, ytr)
+    probs = np.asarray(tree.forward_jnp(xte))
+    np.testing.assert_allclose(probs, tree.predict_proba(xte), atol=1e-6)
+    np.testing.assert_array_equal(probs.argmax(1), tree.predict(xte))
+
+
+def test_forest_agreement(data):
+    xtr, ytr, xte = data
+    rf = RandomForestClassifier(n_estimators=25).fit(xtr, ytr)
+    probs = np.asarray(rf.forward_jnp(xte))
+    np.testing.assert_allclose(probs, rf.predict_proba(xte), atol=1e-6)
+    np.testing.assert_array_equal(probs.argmax(1), rf.predict(xte))
+
+
+def test_forest_agreement_under_jit(data):
+    import jax
+
+    xtr, ytr, xte = data
+    rf = RandomForestClassifier(n_estimators=10).fit(xtr, ytr)
+    fa = forest_to_arrays(rf.trees_, rf.n_classes_)
+    fn = jax.jit(lambda z: forest_forward_jnp(fa, z))
+    np.testing.assert_array_equal(np.asarray(fn(xte)).argmax(1),
+                                  rf.predict(xte))
+
+
+def test_refit_invalidates_flat_cache(data):
+    xtr, ytr, xte = data
+    rf = RandomForestClassifier(n_estimators=5).fit(xtr, ytr)
+    rf.forward_jnp(xte)
+    key0 = rf._flat[0]
+    rf.fit(xtr[::2], ytr[::2])
+    pred = np.asarray(rf.forward_jnp(xte)).argmax(1)
+    assert rf._flat[0] != key0
+    np.testing.assert_array_equal(pred, rf.predict(xte))
+
+
+@pytest.fixture(scope="module")
+def rf_selector_and_mats():
+    mats = list(generate_suite(count=10, seed=5, size_scale=0.25))
+    feats = extract_features_batch(mats)
+    labels = (feats[:, FEATURE_NAMES.index("bandwidth")]
+              / np.maximum(feats[:, 0], 1) > 0.5).astype(int)
+    scaler = StandardScaler().fit(feats)
+    rf = RandomForestClassifier(n_estimators=15).fit(
+        scaler.transform(feats), labels)
+    return ReorderSelector(rf, scaler, ["amd", "rcm"]), mats
+
+
+def test_device_jit_invalidated_on_refit(rf_selector_and_mats):
+    """Refitting the served model in place must rebuild the device jit
+    (whose trace baked the old forest as constants), not serve stale
+    predictions from the pre-refit trees."""
+    import copy
+
+    sel, mats = rf_selector_and_mats
+    sel = copy.deepcopy(sel)  # don't mutate the shared fixture
+    sel.select_batch(mats, path="device")
+    feats = extract_features_batch(mats)
+    flipped = 1 - (feats[:, FEATURE_NAMES.index("bandwidth")]
+                   / np.maximum(feats[:, 0], 1) > 0.5).astype(int)
+    sel.model.fit(sel.scaler.transform(feats), flipped)
+    names_host, _ = sel.select_batch(mats, path="host")
+    names_dev, _ = sel.select_batch(mats, path="device")
+    assert names_dev == names_host
+
+
+def test_select_batch_forest_stays_on_device(rf_selector_and_mats):
+    """Acceptance: a fitted random_forest serves `select_batch` through the
+    jnp forest path — the host `predict` fallback is never taken — and the
+    device decisions match host inference."""
+    sel, mats = rf_selector_and_mats
+    assert hasattr(sel.model, "forward_jnp")
+    names_host, _ = sel.select_batch(mats, path="host")
+
+    def boom(*a, **k):  # any host-inference call fails the test
+        raise AssertionError("host predict fallback taken on device path")
+
+    orig_predict, orig_proba = sel.model.predict, sel.model.predict_proba
+    sel.model.predict = boom
+    sel.model.predict_proba = boom
+    try:
+        names_dev, _ = sel.select_batch(mats, path="device")
+    finally:
+        sel.model.predict, sel.model.predict_proba = orig_predict, orig_proba
+    assert names_dev == names_host

@@ -1,0 +1,224 @@
+"""ExecutionPlan pipeline: builder, two-tier cache, async server."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.features import FEATURE_NAMES, extract_features_batch
+from repro.core.ml import RandomForestClassifier
+from repro.core.plan import ExecutionPlan, PlanBuilder, execute_plan
+from repro.core.plan_cache import (PlanCache, TwoTierPlanCache,
+                                   matrix_fingerprint)
+from repro.core.scaling import StandardScaler
+from repro.core.selector import ReorderSelector
+from repro.sparse.dataset import generate_suite
+
+
+@pytest.fixture(scope="module")
+def mats():
+    return list(generate_suite(count=8, seed=3, size_scale=0.25))
+
+
+@pytest.fixture(scope="module")
+def rf_selector(mats):
+    feats = extract_features_batch(mats)
+    labels = (feats[:, FEATURE_NAMES.index("bandwidth")]
+              / np.maximum(feats[:, 0], 1) > 0.5).astype(int)
+    scaler = StandardScaler().fit(feats)
+    rf = RandomForestClassifier(n_estimators=10).fit(
+        scaler.transform(feats), labels)
+    return ReorderSelector(rf, scaler, ["amd", "rcm"])
+
+
+# ---------------------------------------------------------------------------
+# PlanBuilder + execute_plan
+# ---------------------------------------------------------------------------
+
+def test_plan_batch_builds_valid_plans(mats, rf_selector):
+    builder = PlanBuilder(rf_selector, PlanCache(64), batch_size=4)
+    plans = builder.plan_batch(mats)
+    assert len(plans) == len(mats)
+    for m, p in zip(mats, plans):
+        assert isinstance(p, ExecutionPlan)
+        assert p.fingerprint == matrix_fingerprint(m)
+        assert p.algorithm in rf_selector.algorithms
+        assert sorted(p.perm.tolist()) == list(range(m.n))
+        assert p.predicted_flops == p.sym.flops > 0
+
+
+def test_execute_plan_solves(mats, rf_selector):
+    builder = PlanBuilder(rf_selector, PlanCache(64), batch_size=4)
+    m = mats[2]
+    plan = builder.plan_batch([m])[0]
+    b = np.random.default_rng(1).standard_normal(m.n)
+    res = execute_plan(m, plan, b)
+    assert res["residual"] < 1e-8
+    res2 = execute_plan(m, plan, b, solver="simplicial")
+    assert res2["residual"] < 1e-8
+    np.testing.assert_allclose(res["x"], res2["x"], rtol=1e-8, atol=1e-10)
+
+
+def test_warm_hit_skips_select_and_symbolic(mats, rf_selector, monkeypatch):
+    """Acceptance: a warm hit does no feature extraction, no classifier
+    call, no symbolic analysis — the selector can be removed outright and
+    the symbolic routine booby-trapped, and warm serving still works."""
+    builder = PlanBuilder(rf_selector, PlanCache(64), batch_size=4)
+    cold = builder.plan_batch(mats)
+    built, selected = builder.plans_built, builder.select_calls
+
+    class _NoSelector:
+        def select_batch(self, *a, **k):
+            raise AssertionError("selector ran on a warm hit")
+
+        select = select_batch
+
+    monkeypatch.setattr(builder, "selector", _NoSelector())
+    monkeypatch.setattr("repro.core.plan.symbolic_cholesky",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            AssertionError("symbolic ran on a warm hit")))
+    warm = builder.plan_batch(mats)
+    assert [p.fingerprint for p in warm] == [p.fingerprint for p in cold]
+    assert builder.plans_built == built and builder.select_calls == selected
+    assert builder.stats()["hit_rate"] == 0.5  # second pass all hits
+
+
+def test_execute_plan_runs_no_symbolic(mats, rf_selector, monkeypatch):
+    builder = PlanBuilder(rf_selector, PlanCache(8), batch_size=4)
+    plan = builder.plan_batch([mats[1]])[0]
+    monkeypatch.setattr("repro.sparse.multifrontal.symbolic_cholesky",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            AssertionError("symbolic ran under a plan")))
+    res = execute_plan(mats[1], plan)
+    assert res["residual"] < 1e-8
+
+
+def test_factor_and_solve_timed_accepts_plan_sym(mats, rf_selector):
+    from repro.sparse.csr import permute_symmetric
+    from repro.sparse.multifrontal import factor_and_solve_timed
+
+    builder = PlanBuilder(rf_selector, PlanCache(8), batch_size=4)
+    plan = builder.plan_batch([mats[3]])[0]
+    pa = permute_symmetric(mats[3], plan.perm)
+    res = factor_and_solve_timed(pa, sym=plan.sym)
+    assert res["t_symbolic"] == 0.0
+    assert res["residual"] < 1e-8
+
+
+# ---------------------------------------------------------------------------
+# two-tier cache
+# ---------------------------------------------------------------------------
+
+def test_two_tier_persistence_roundtrip(mats, rf_selector, tmp_path):
+    d = str(tmp_path / "plans")
+    builder = PlanBuilder(rf_selector, TwoTierPlanCache(16, d), batch_size=4)
+    plan = builder.plan_batch([mats[0]])[0]
+    key = matrix_fingerprint(mats[0])
+
+    fresh = TwoTierPlanCache(16, d)  # simulated process restart
+    got = fresh.get(key)
+    assert got is not None and got.algorithm == plan.algorithm
+    np.testing.assert_array_equal(got.perm, plan.perm)
+    np.testing.assert_array_equal(got.sym.Li, plan.sym.Li)
+    s = fresh.stats()
+    assert s["disk_hits"] == 1 and s["hits"] == 1 and s["misses"] == 0
+    assert fresh.get(key) is got or fresh.get(key) is not None
+    assert fresh.stats()["memory_hits"] >= 1  # promoted into the LRU
+
+
+def test_two_tier_lru_eviction_falls_to_disk(tmp_path):
+    c = TwoTierPlanCache(2, str(tmp_path / "plans"))
+    for key, val in [("a", 1), ("b", 2), ("c", 3)]:
+        c.put(key, val)
+    assert c.stats()["evictions"] == 1 and len(c) == 2
+    assert c.peek("a") is None          # gone from memory...
+    assert c.get("a") == 1              # ...recovered from disk
+    s = c.stats()
+    assert s["disk_hits"] == 1 and s["misses"] == 0
+    assert c.peek("a") == 1             # promoted back (evicting "b")
+    assert len(c) == 2 and c.disk_entries() == 3
+
+
+def test_two_tier_version_namespaces_disk(tmp_path):
+    """Bumping the cache version (e.g. after retraining the selector)
+    makes every old disk entry a miss without touching its file."""
+    d = str(tmp_path / "plans")
+    old = TwoTierPlanCache(4, d, version="m1")
+    old.put("k", "plan-from-old-model")
+    new = TwoTierPlanCache(4, d, version="m2")
+    assert new.get("k") is None
+    assert new.disk_entries() == 0 and old.disk_entries() == 1
+    assert TwoTierPlanCache(4, d, version="m1").get("k") \
+        == "plan-from-old-model"
+
+
+def test_two_tier_ignores_corrupt_entry(tmp_path):
+    c = TwoTierPlanCache(2, str(tmp_path / "plans"))
+    c.put("a", {"x": 1})
+    with open(c._path("a"), "wb") as f:
+        f.write(b"not a pickle")
+    c2 = TwoTierPlanCache(2, str(tmp_path / "plans"))
+    assert c2.get("a") is None
+    assert c2.stats()["misses"] == 1
+
+
+@pytest.mark.parametrize("factory", [
+    lambda tmp: PlanCache(capacity=32),
+    lambda tmp: TwoTierPlanCache(32, str(tmp / "plans")),
+])
+def test_plan_cache_thread_safety(tmp_path, factory):
+    cache = factory(tmp_path)
+    keys = [f"k{i}" for i in range(100)]
+    gets_per_thread = 300
+    errors = []
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(gets_per_thread):
+                k = keys[int(rng.integers(len(keys)))]
+                if cache.get(k) is None:
+                    cache.put(k, seed)
+        except Exception as exc:  # pragma: no cover - only on races
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    s = cache.stats()
+    assert s["hits"] + s["misses"] == 8 * gets_per_thread
+    assert len(cache) <= 32
+
+
+# ---------------------------------------------------------------------------
+# async server
+# ---------------------------------------------------------------------------
+
+def test_async_plan_server(mats, rf_selector):
+    from repro.launch.serve_selector import AsyncPlanServer
+
+    builder = PlanBuilder(rf_selector, PlanCache(64), batch_size=4)
+    server = AsyncPlanServer(builder, batch_size=4, max_wait_ms=2.0,
+                             build_workers=2)
+    try:
+        req = list(mats) + [mats[0], mats[3]]  # duplicates in-flight
+        plans = server.handle(req)
+        assert [p.fingerprint for p in plans] == \
+            [matrix_fingerprint(m) for m in req]
+        assert plans[-2].fingerprint == plans[0].fingerprint
+        # one plan built per distinct structure, despite the duplicates
+        assert builder.plans_built == len(mats)
+
+        warm = server.handle(list(mats))
+        assert [p.fingerprint for p in warm] == \
+            [p.fingerprint for p in plans[: len(mats)]]
+        assert builder.plans_built == len(mats)  # nothing rebuilt
+        s = server.stats()
+        assert s["warm_hits"] >= len(mats)
+        assert s["p50_ms"] >= 0.0 and s["p99_ms"] >= s["p50_ms"]
+        assert s["requests"] == len(req) + len(mats)
+    finally:
+        server.close()
+    server.close()  # idempotent
