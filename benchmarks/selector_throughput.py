@@ -3,12 +3,16 @@
     PYTHONPATH=src python -m benchmarks.selector_throughput [--use-pallas]
     PYTHONPATH=src python -m benchmarks.selector_throughput --mode e2e
 
-``--mode throughput`` (default) reports matrices/sec for
-``ReorderSelector.select_batch`` at batch sizes 1/8/64 on the host
-(per-matrix numpy) path and the device (CSR-native padded-batch) path. The
-device path amortizes dispatch and jit overhead across the batch — the
-spread between batch=1 and batch=64 is the argument for request batching in
-``repro.launch.serve_selector``.
+Both modes drive :class:`repro.engine.SolverEngine` — the same facade the
+serving entrypoint uses, so the numbers measure the production path. The
+engine versions its plan cache with the trained model's fingerprint; no
+manual cache ``version=`` handling appears anywhere here.
+
+``--mode throughput`` (default) reports matrices/sec for batched selection
+at batch sizes 1/8/64 on the host (per-matrix numpy) path and the device
+(CSR-native padded-batch) path. The device path amortizes dispatch and jit
+overhead across the batch — the spread between batch=1 and batch=64 is the
+argument for request batching in ``repro.launch.serve_selector``.
 
 ``--mode e2e`` measures the full request lifecycle — select + reorder +
 symbolic + numeric solve — through the :class:`ExecutionPlan` pipeline,
@@ -16,7 +20,8 @@ cold (empty two-tier plan cache: every stage runs) vs. warm (every
 structure cached: fingerprint → plan → numeric solve only), and reports
 cache hit rate and p50/p99 per-request latency alongside matrices/sec.
 The warm/cold gap is the payoff of caching *plans* instead of algorithm
-names.
+names. ``--campaign-count/--campaign-scale/--pool`` shrink everything for
+smoke runs (CI uses a tiny suite).
 """
 from __future__ import annotations
 
@@ -32,21 +37,21 @@ except ImportError:  # run as a loose script: benchmarks/ on sys.path
     from common import ART
 
 from repro.core.labeling import load_or_build
-from repro.core.plan import PlanBuilder, execute_plan
-from repro.core.plan_cache import TwoTierPlanCache
-from repro.core.selector import train_selector
+from repro.core.plan import execute_plan
+from repro.engine import EngineConfig, SolverEngine
 from repro.sparse.dataset import generate_suite
 
 BATCH_SIZES = (1, 8, 64)
 
 
-def bench_path(sel, mats, bs: int, path: str, use_pallas: bool,
+def bench_path(engine, mats, bs: int, path: str, use_pallas: bool,
                repeats: int = 3) -> float:
     """matrices/sec for select_batch at batch size bs (best of repeats).
 
     Batches are formed from a size-sorted pool (as the serving loop does),
     so padded batch dims track their members' true sizes.
     """
+    sel = engine.selector
     mats = sorted(mats, key=lambda m: (m.nnz, m.n))
     batches = [mats[lo : lo + bs] for lo in range(0, len(mats), bs)]
     batches = [b for b in batches if len(b) == bs]
@@ -65,70 +70,67 @@ def _pct(lat, q):
     return float(np.percentile(np.asarray(lat) * 1e3, q))
 
 
-def bench_e2e(sel, mats, path: str, use_pallas: bool, batch: int,
-              repeats: int = 2) -> None:
+def bench_e2e(engine, mats, repeats: int = 2) -> None:
     """Cold vs. warm per-request latency through the ExecutionPlan pipeline.
 
-    Each request = plan the structure, then numerically factor+solve with
-    it. Cold requests pay select + reorder + symbolic + numeric; warm
-    requests (same structures, fresh values) pay fingerprint + numeric
-    only. A fresh temp dir keeps the cold pass honest across runs.
+    Each request = plan the structure (``engine.plan_batch``), then
+    numerically factor+solve with it. Cold requests pay select + reorder +
+    symbolic + numeric; warm requests (same structures, fresh values) pay
+    fingerprint + numeric only. The engine was built over a fresh temp
+    cache dir, which keeps the cold pass honest across runs.
     """
     rng = np.random.default_rng(0)
-    with tempfile.TemporaryDirectory(prefix="plan_cache_bench_") as d:
-        builder = PlanBuilder(sel, TwoTierPlanCache(4 * len(mats), d),
-                              path=path, use_pallas=use_pallas,
-                              batch_size=batch)
-        # jit warm-up outside the timed region: per-request selection over
-        # the whole pool compiles every padded shape bucket exactly as the
-        # cold pass will hit them (one matrix per micro-batch), so the
-        # cold/warm gap measures the plan cache, not jit compiles; then
-        # reset the selection counters so the report reflects serving
+    builder = engine.builder
+    # jit warm-up outside the timed region: per-request selection over
+    # the whole pool compiles every padded shape bucket exactly as the
+    # cold pass will hit them (one matrix per micro-batch), so the
+    # cold/warm gap measures the plan cache, not jit compiles; then
+    # reset the selection counters so the report reflects serving
+    for m in mats:
+        builder.select_names([m])
+    builder.reset_stats()
+
+    def run_pass():
+        lats, solves = [], []
         for m in mats:
-            builder.select_names([m])
-        builder.reset_stats()
+            q = m.copy()  # fresh numeric values, same structure
+            q.data = q.data * float(rng.uniform(0.5, 2.0))
+            b = rng.standard_normal(m.n)
+            t0 = time.perf_counter()
+            plan = engine.plan_batch([q])[0]
+            res = execute_plan(q, plan, b)
+            lats.append(time.perf_counter() - t0)
+            solves.append(res["time"])
+        return lats, solves
 
-        def run_pass():
-            lats, solves = [], []
-            for m in mats:
-                q = m.copy()  # fresh numeric values, same structure
-                q.data = q.data * float(rng.uniform(0.5, 2.0))
-                b = rng.standard_normal(m.n)
-                t0 = time.perf_counter()
-                plan = builder.plan_batch([q])[0]
-                res = execute_plan(q, plan, b)
-                lats.append(time.perf_counter() - t0)
-                solves.append(res["time"])
-            return lats, solves
+    cold_lat, cold_solve = run_pass()
+    warm_lat, warm_solve = [], []
+    for _ in range(repeats):  # every warm measurement is aggregated
+        lat, solve = run_pass()
+        warm_lat += lat
+        warm_solve += solve
 
-        cold_lat, cold_solve = run_pass()
-        warm_lat, warm_solve = [], []
-        for _ in range(repeats):  # every warm measurement is aggregated
-            lat, solve = run_pass()
-            warm_lat += lat
-            warm_solve += solve
-
-        s = builder.stats()
-        print("pass,requests,mean_ms,p50_ms,p99_ms,matrices_per_sec")
-        for tag, lat in (("cold", cold_lat), ("warm", warm_lat)):
-            print(f"{tag},{len(lat)},{1e3*np.mean(lat):.2f},"
-                  f"{_pct(lat, 50):.2f},{_pct(lat, 99):.2f},"
-                  f"{len(lat)/sum(lat):.1f}")
-        print(f"# cache: hit_rate {s['hit_rate']:.2f} "
-              f"({s['hits']} hits / {s['misses']} misses, "
-              f"disk entries {s['disk_entries']}), "
-              f"{s['plans_built']} plans built, "
-              f"select {s['select_seconds']*1e3:.0f} ms, "
-              f"build {s['build_seconds']*1e3:.0f} ms")
-        print(f"# total request time: cold {1e3*sum(cold_lat):.0f} ms vs "
-              f"warm {1e3*sum(warm_lat):.0f} ms; numeric solve share "
-              f"cold {sum(cold_solve)/max(sum(cold_lat), 1e-12):.2f} vs "
-              f"warm {sum(warm_solve)/max(sum(warm_lat), 1e-12):.2f}")
-        speedup = np.mean(cold_lat) / max(np.mean(warm_lat), 1e-12)
-        verdict = "OK" if np.mean(warm_lat) < np.mean(cold_lat) else "FAIL"
-        print(f"# warm below cold: {verdict} "
-              f"(mean {1e3*np.mean(cold_lat):.2f} ms → "
-              f"{1e3*np.mean(warm_lat):.2f} ms, {speedup:.1f}x)")
+    s = builder.stats()
+    print("pass,requests,mean_ms,p50_ms,p99_ms,matrices_per_sec")
+    for tag, lat in (("cold", cold_lat), ("warm", warm_lat)):
+        print(f"{tag},{len(lat)},{1e3*np.mean(lat):.2f},"
+              f"{_pct(lat, 50):.2f},{_pct(lat, 99):.2f},"
+              f"{len(lat)/sum(lat):.1f}")
+    print(f"# cache: hit_rate {s['hit_rate']:.2f} "
+          f"({s['hits']} hits / {s['misses']} misses, "
+          f"disk entries {s['disk_entries']}), "
+          f"{s['plans_built']} plans built, "
+          f"select {s['select_seconds']*1e3:.0f} ms, "
+          f"build {s['build_seconds']*1e3:.0f} ms")
+    print(f"# total request time: cold {1e3*sum(cold_lat):.0f} ms vs "
+          f"warm {1e3*sum(warm_lat):.0f} ms; numeric solve share "
+          f"cold {sum(cold_solve)/max(sum(cold_lat), 1e-12):.2f} vs "
+          f"warm {sum(warm_solve)/max(sum(warm_lat), 1e-12):.2f}")
+    speedup = np.mean(cold_lat) / max(np.mean(warm_lat), 1e-12)
+    verdict = "OK" if np.mean(warm_lat) < np.mean(cold_lat) else "FAIL"
+    print(f"# warm below cold: {verdict} "
+          f"(mean {1e3*np.mean(cold_lat):.2f} ms → "
+          f"{1e3*np.mean(warm_lat):.2f} ms, {speedup:.1f}x)")
 
 
 def main() -> None:
@@ -141,29 +143,40 @@ def main() -> None:
     p.add_argument("--batch", type=int, default=8,
                    help="selector micro-batch size in e2e mode")
     p.add_argument("--model", default="logistic_regression")
+    p.add_argument("--campaign-count", type=int, default=36,
+                   help="labeling-campaign size (shrink for smoke runs)")
+    p.add_argument("--campaign-scale", type=float, default=0.35)
     args = p.parse_args()
 
-    ds = load_or_build(cache_dir=ART, count=36, seed=7, size_scale=0.35,
-                       repeats=1, verbose=True)
-    sel, rep = train_selector(ds, args.model, "standard", fast=True, cv=3)
-    print(f"# selector: {args.model} (test_acc {rep['test_accuracy']:.2f})")
-
+    ds = load_or_build(cache_dir=ART, count=args.campaign_count, seed=7,
+                       size_scale=args.campaign_scale, repeats=1,
+                       verbose=True)
     mats = list(generate_suite(count=args.pool, seed=11, size_scale=0.4))
     print(f"# pool: {len(mats)} matrices, n∈[{min(m.n for m in mats)}, "
           f"{max(m.n for m in mats)}], nnz_max "
           f"{max(m.nnz for m in mats)}")
-    if args.mode == "e2e":
-        bench_e2e(sel, mats, "device", args.use_pallas, args.batch)
-        return
-    print("path,batch,matrices_per_sec")
-    for path in ("host", "device"):
-        for bs in BATCH_SIZES:
-            if bs > len(mats):
-                print(f"{path},{bs},skipped (pool < batch)")
-                continue
-            rate = bench_path(sel, mats, bs, path, args.use_pallas
-                              if path == "device" else False)
-            print(f"{path},{bs},{rate:.1f}")
+
+    with tempfile.TemporaryDirectory(prefix="plan_cache_bench_") as d:
+        engine = SolverEngine(EngineConfig(
+            model=args.model, cache_dir=d, cache_capacity=4 * len(mats),
+            path="device", use_pallas=args.use_pallas,
+            batch_size=args.batch, fast_grids=True, cv=3))
+        rep = engine.train(ds)
+        print(f"# selector: {args.model} "
+              f"(test_acc {rep['test_accuracy']:.2f}, "
+              f"fingerprint {engine.fingerprint[:12]})")
+        if args.mode == "e2e":
+            bench_e2e(engine, mats)
+            return
+        print("path,batch,matrices_per_sec")
+        for path in ("host", "device"):
+            for bs in BATCH_SIZES:
+                if bs > len(mats):
+                    print(f"{path},{bs},skipped (pool < batch)")
+                    continue
+                rate = bench_path(engine, mats, bs, path, args.use_pallas
+                                  if path == "device" else False)
+                print(f"{path},{bs},{rate:.1f}")
 
 
 if __name__ == "__main__":

@@ -1,22 +1,22 @@
-"""Quickstart: the paper's pipeline end to end, in under a minute.
+"""Quickstart: the paper's pipeline end to end, in under a minute —
+through the one production API, :class:`repro.engine.SolverEngine`.
 
 1. Generate a small Florida-like matrix suite.
 2. Measure factor+solve time per reordering (AMD/SCOTCH/ND/RCM) → labels.
-3. Train the selector (random forest + standardization, grid-searched).
-4. Predict the ordering for an unseen matrix and solve with it.
+3. ``engine.train(ds)``: selector (random forest + standardization,
+   grid-searched) with a fingerprinted model.
+4. ``engine.select`` / ``engine.solve`` on an unseen matrix, and
+   ``engine.save`` → a versioned SelectorBundle artifact.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
+import tempfile
 import time
 
-import numpy as np
-
 from repro.core.labeling import run_labeling_campaign
-from repro.core.selector import train_selector
-from repro.sparse.csr import permute_symmetric
+from repro.engine import EngineConfig, SolverEngine
 from repro.sparse.dataset import generate_suite
-from repro.sparse.multifrontal import factor_and_solve_timed
-from repro.sparse.reorder import get_reordering
 
 
 def main():
@@ -29,27 +29,42 @@ def main():
     dist = {a: int((ds.labels == i).sum()) for i, a in enumerate(ds.algorithms)}
     print(f"   done in {time.perf_counter()-t0:.1f}s; winners: {dist}")
 
-    print("== 3. training the selector (RF + standardization)")
-    sel, rep = train_selector(ds, "random_forest", "standard", fast=True,
-                              cv=3)
+    print("== 3. training the engine (RF + standardization)")
+    engine = SolverEngine(EngineConfig(
+        model="random_forest", scaling="standard", fast_grids=True, cv=3,
+        cache_dir=None,  # demo stays in-memory; serving uses the disk tier
+        path="host"))
+    rep = engine.train(ds)
     print(f"   test accuracy {rep['test_accuracy']:.2%}, "
           f"solve-time reduction vs AMD-only {rep['reduction_vs_amd']:.2%}, "
           f"mean speedup {rep['mean_speedup_vs_amd']:.2f}x")
+    print(f"   model fingerprint {engine.fingerprint[:16]} "
+          "(versions the plan cache automatically)")
     print("   (tiny-sample demo — the full 960-matrix campaign in "
           "benchmarks/run.py is the real evaluation)")
 
     print("== 4. selecting + solving an unseen matrix")
     unseen = list(generate_suite(count=3, seed=99, size_scale=0.6))[0]
-    alg, dt = sel.select(unseen)
+    alg, dt = engine.select(unseen)
     print(f"   {unseen.name}: predicted ordering = {alg} "
           f"(prediction took {dt*1e3:.1f} ms)")
-    perm = get_reordering(alg)(unseen)
-    stats = factor_and_solve_timed(permute_symmetric(unseen, perm))
-    amd_stats = factor_and_solve_timed(
-        permute_symmetric(unseen, get_reordering("amd")(unseen)))
-    print(f"   solve with {alg}: {stats['time']*1e3:.1f} ms "
-          f"(fill {stats['fill']}); with amd: {amd_stats['time']*1e3:.1f} ms "
-          f"(fill {amd_stats['fill']}); residual {stats['residual']:.1e}")
+    res = engine.solve(unseen)
+    # same pipeline forced to AMD, for the comparison the paper reports
+    from repro.core.plan import execute_plan
+    res_amd = execute_plan(unseen,
+                           engine.builder.build(unseen, algorithm="amd"))
+    print(f"   solve with {alg}: {res['time']*1e3:.1f} ms "
+          f"(nnz_L {res['nnz_L']}); with amd: {res_amd['time']*1e3:.1f} ms "
+          f"(nnz_L {res_amd['nnz_L']}); residual {res['residual']:.1e}")
+
+    print("== 5. persisting the trained engine as a SelectorBundle")
+    with tempfile.TemporaryDirectory() as d:
+        path = engine.save(os.path.join(d, "selector.bundle"))
+        engine2 = SolverEngine.load(path)
+        alg2, _ = engine2.select(unseen)
+        print(f"   round-trip OK: fingerprint matches "
+              f"{engine2.fingerprint == engine.fingerprint}, "
+              f"same selection {alg2 == alg}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,11 @@
 """Solver-as-a-service: batched sparse solve requests with learned ordering
-selection — the paper's deployment scenario.
+selection — the paper's deployment scenario, through
+:class:`repro.engine.SolverEngine`.
 
-A stream of solve requests (matrix + rhs) arrives; per request the service
-extracts features, predicts the ordering, and runs the multifrontal solver.
-Compares total service time vs an AMD-only policy, and shows the on-device
+A stream of solve requests (matrix + rhs) arrives; ``engine.solve`` plans
+each structure (cached ExecutionPlan: selection + permutation + symbolic
+analysis run once per structure) and runs the multifrontal solver. Compares
+total service time vs an AMD-only policy, and shows the on-device
 (block-ELL SpMV Pallas kernel) residual check.
 
     PYTHONPATH=src python examples/serve_solver.py
@@ -13,33 +15,22 @@ import time
 import numpy as np
 
 from repro.core.labeling import run_labeling_campaign
-from repro.core.selector import train_selector
+from repro.core.plan import execute_plan
+from repro.engine import EngineConfig, SolverEngine
 from repro.kernels import ops
-from repro.sparse.csr import permute_symmetric
 from repro.sparse.dataset import generate_suite
-from repro.sparse.multifrontal import (multifrontal_cholesky,
-                                       multifrontal_solve)
-from repro.sparse.reorder import get_reordering
-
-
-def solve_with(alg, a, b):
-    t0 = time.perf_counter()
-    perm = get_reordering(alg)(a)
-    ap = permute_symmetric(a, perm)
-    f = multifrontal_cholesky(ap)
-    xp = multifrontal_solve(f, b[perm])
-    x = np.empty_like(xp)
-    x[perm] = xp
-    return x, time.perf_counter() - t0
 
 
 def main():
-    print("== training the selector on a small campaign")
+    print("== training the engine on a small campaign")
     mats = list(generate_suite(count=48, seed=3, size_scale=0.5))
     ds = run_labeling_campaign(mats)
-    sel, rep = train_selector(ds, "random_forest", "standard", fast=True,
-                              cv=3)
-    print(f"   selector accuracy {rep['test_accuracy']:.2%}")
+    engine = SolverEngine(EngineConfig(
+        model="random_forest", fast_grids=True, cv=3,
+        cache_dir=None, path="host"))
+    rep = engine.train(ds)
+    print(f"   selector accuracy {rep['test_accuracy']:.2%} "
+          f"(fingerprint {engine.fingerprint[:12]})")
 
     print("== serving 8 requests")
     rng = np.random.default_rng(11)
@@ -47,16 +38,21 @@ def main():
     t_sel_total = t_amd_total = 0.0
     for a in requests:
         b = rng.standard_normal(a.n)
-        alg, t_pred = sel.select(a)
-        x, t_sel = solve_with(alg, a, b)
-        _, t_amd = solve_with("amd", a, b)
-        t_sel_total += t_sel + t_pred
+        t0 = time.perf_counter()
+        res = engine.solve(a, b)
+        t_sel = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        execute_plan(a, engine.builder.build(a, algorithm="amd"), b)
+        t_amd = time.perf_counter() - t0
+        t_sel_total += t_sel
         t_amd_total += t_amd
         # on-device residual check through the block-ELL SpMV kernel
-        ax = ops.spmv(a.indptr, a.indices, a.data, x.astype(np.float32))
+        ax = ops.spmv(a.indptr, a.indices, a.data,
+                      res["x"].astype(np.float32))
         resid = np.linalg.norm(ax - b) / np.linalg.norm(b)
-        print(f"   {a.name:16s} → {alg:6s} solve {t_sel*1e3:6.1f} ms "
-              f"(amd {t_amd*1e3:6.1f} ms)  residual {resid:.2e}")
+        print(f"   {a.name:16s} → {res['algorithm']:6s} "
+              f"solve {t_sel*1e3:6.1f} ms (amd {t_amd*1e3:6.1f} ms)  "
+              f"residual {resid:.2e}")
     print(f"== totals: selected {t_sel_total*1e3:.0f} ms vs AMD-only "
           f"{t_amd_total*1e3:.0f} ms "
           f"({(1 - t_sel_total / t_amd_total) * 100:+.1f}% reduction)")

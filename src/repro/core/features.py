@@ -32,6 +32,7 @@ from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 
+from repro.engine.registry import register_feature_set
 from repro.sparse.csr import CSRMatrix, bandwidth, profile
 from repro.sparse.graph import adjacency, degrees
 
@@ -318,3 +319,21 @@ def extract_features_jnp(dense):
         deg.max(), deg.min(), deg.mean(),
         bw.astype(jnp.float32), prof.astype(jnp.float32),
     ])
+
+
+# ---------------------------------------------------------------------------
+# Feature-set registration — the engine resolves featurizers by name, so
+# alternative schemas (here the beyond-paper extended set; elsewhere
+# third-party sets via @register_feature_set) swap in without touching the
+# selector. The schema (name list) is persisted in SelectorBundles and
+# validated on load.
+# ---------------------------------------------------------------------------
+
+register_feature_set("paper12", names=FEATURE_NAMES,
+                     extract=extract_features,
+                     extract_batch=extract_features_batch,
+                     extract_batch_jnp=extract_features_batch_jnp,
+                     paper="Table 3")
+register_feature_set("extended19", names=EXTENDED_FEATURE_NAMES,
+                     extract=extract_features_extended,
+                     paper="Table 3 + EXPERIMENTS feature study")

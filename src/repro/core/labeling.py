@@ -15,7 +15,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.features import FEATURE_NAMES, extract_features
+from repro.core.features import FEATURE_NAMES  # noqa: F401  (re-export)
+from repro.engine.registry import get_feature_set
 from repro.sparse.csr import CSRMatrix, permute_symmetric
 from repro.sparse.dataset import generate_suite
 from repro.sparse.multifrontal import factor_and_solve_timed
@@ -37,6 +38,7 @@ class LabeledDataset:
     dims: np.ndarray              # (m,)
     nnzs: np.ndarray              # (m,)
     algorithms: List[str]
+    feature_set: str = "paper12"  # registry name of the featurizer used
 
     def save(self, path: str) -> None:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
@@ -46,7 +48,9 @@ class LabeledDataset:
             flops=self.flops, dims=self.dims, nnzs=self.nnzs,
             names=np.array(self.names), groups=np.array(self.groups),
             algorithms=np.array(self.algorithms),
-            feature_names=np.array(FEATURE_NAMES))
+            feature_set=np.array(self.feature_set),
+            feature_names=np.array(
+                list(get_feature_set(self.feature_set).names)))
 
     @staticmethod
     def load(path: str) -> "LabeledDataset":
@@ -55,7 +59,10 @@ class LabeledDataset:
             z["features"], z["labels"], z["times"], z["order_times"],
             z["fills"], z["flops"], [str(s) for s in z["names"]],
             [str(s) for s in z["groups"]], z["dims"], z["nnzs"],
-            [str(s) for s in z["algorithms"]])
+            [str(s) for s in z["algorithms"]],
+            # pre-registry caches carry no feature_set tag
+            feature_set=(str(z["feature_set"]) if "feature_set" in z
+                         else "paper12"))
 
 
 def _measure_one(a: CSRMatrix, alg: str, repeats: int) -> Dict:
@@ -78,10 +85,12 @@ def run_labeling_campaign(
     algorithms: Sequence[str] = tuple(LABEL_ALGORITHMS),
     repeats: int = 1,
     verbose: bool = False,
+    feature_set: str = "paper12",
 ) -> LabeledDataset:
+    fs = get_feature_set(feature_set)
     m = len(mats)
     n_alg = len(algorithms)
-    feats = np.zeros((m, len(FEATURE_NAMES)))
+    feats = np.zeros((m, fs.dim))
     times = np.zeros((m, n_alg))
     order_times = np.zeros((m, n_alg))
     fills = np.zeros((m, n_alg), dtype=np.int64)
@@ -90,7 +99,7 @@ def run_labeling_campaign(
     dims = np.zeros(m, dtype=np.int64)
     nnzs = np.zeros(m, dtype=np.int64)
     for i, a in enumerate(mats):
-        feats[i] = extract_features(a)
+        feats[i] = fs.extract(a)
         names.append(a.name)
         groups.append(a.group)
         dims[i], nnzs[i] = a.n, a.nnz
@@ -104,13 +113,17 @@ def run_labeling_campaign(
             print(f"  labeled {i + 1}/{m}")
     labels = times.argmin(axis=1)
     return LabeledDataset(feats, labels, times, order_times, fills, flops,
-                          names, groups, dims, nnzs, list(algorithms))
+                          names, groups, dims, nnzs, list(algorithms),
+                          feature_set=feature_set)
 
 
 def load_or_build(cache_dir: str = "artifacts", count: int = 960,
                   seed: int = 0, size_scale: float = 1.0,
-                  repeats: int = 1, verbose: bool = True) -> LabeledDataset:
+                  repeats: int = 1, verbose: bool = True,
+                  feature_set: str = "paper12") -> LabeledDataset:
     tag = f"c{count}_s{seed}_x{size_scale:g}_r{repeats}"
+    if feature_set != "paper12":  # paper12 keeps the pre-registry tag
+        tag += f"_f{feature_set}"
     path = os.path.join(cache_dir, f"labels_{tag}.npz")
     if os.path.exists(path):
         return LabeledDataset.load(path)
@@ -118,7 +131,8 @@ def load_or_build(cache_dir: str = "artifacts", count: int = 960,
         print(f"[labeling] building suite ({count} matrices, scale "
               f"{size_scale}) — cached to {path}")
     mats = list(generate_suite(count=count, seed=seed, size_scale=size_scale))
-    ds = run_labeling_campaign(mats, repeats=repeats, verbose=verbose)
+    ds = run_labeling_campaign(mats, repeats=repeats, verbose=verbose,
+                               feature_set=feature_set)
     ds.save(path)
     # sidecar summary for humans
     with open(path.replace(".npz", ".json"), "w") as f:

@@ -1,27 +1,39 @@
-"""The seven model families of the paper's Fig. 4, implemented from scratch."""
+"""The seven model families of the paper's Fig. 4, implemented from scratch.
+
+Each family registers itself in :data:`repro.engine.MODEL_REGISTRY` under
+its zoo name; ``MODEL_ZOO`` is that registry (a ``Mapping``), kept under the
+legacy name so existing ``MODEL_ZOO[name]()`` / ``sorted(MODEL_ZOO)`` call
+sites work unchanged — third-party families now plug in with
+``@register_model("name")`` instead of editing this dict.
+"""
+from repro.engine.registry import MODEL_REGISTRY, register_model
+
 from .base import BaseClassifier, accuracy_score
 from .decision_tree import DecisionTreeClassifier
-from .forest_jnp import (ForestArrays, forest_forward_jnp, forest_to_arrays,
-                         tree_to_arrays)
+from .forest_jnp import (ForestArrays, arrays_to_tree, forest_forward_jnp,
+                         forest_to_arrays, tree_to_arrays)
 from .jax_models import LogisticRegression, MLPClassifier, SVMClassifier
 from .knn import KNeighborsClassifier
 from .naive_bayes import GaussianNB
 from .random_forest import RandomForestClassifier
 
-MODEL_ZOO = {
-    "random_forest": RandomForestClassifier,
-    "decision_tree": DecisionTreeClassifier,
-    "logistic_regression": LogisticRegression,
-    "naive_bayes": GaussianNB,
-    "svm": SVMClassifier,
-    "mlp": MLPClassifier,
-    "knn": KNeighborsClassifier,
-}
+# device_capable: fitted instances expose forward_jnp, so select_batch's
+# scaler+forward+argmax fuses into one jit (trees/forests via forest_jnp)
+register_model("random_forest", device_capable=True)(RandomForestClassifier)
+register_model("decision_tree", device_capable=True)(DecisionTreeClassifier)
+register_model("logistic_regression", device_capable=True)(LogisticRegression)
+register_model("naive_bayes")(GaussianNB)
+register_model("svm", device_capable=True)(SVMClassifier)
+register_model("mlp", device_capable=True)(MLPClassifier)
+register_model("knn")(KNeighborsClassifier)
+
+MODEL_ZOO = MODEL_REGISTRY
 
 __all__ = [
     "BaseClassifier", "accuracy_score", "DecisionTreeClassifier",
     "RandomForestClassifier", "LogisticRegression", "SVMClassifier",
     "MLPClassifier", "GaussianNB", "KNeighborsClassifier", "MODEL_ZOO",
-    "ForestArrays", "tree_to_arrays", "forest_to_arrays",
+    "MODEL_REGISTRY", "register_model",
+    "ForestArrays", "tree_to_arrays", "arrays_to_tree", "forest_to_arrays",
     "forest_forward_jnp",
 ]

@@ -39,6 +39,28 @@ class BaseClassifier:
         p.update(updates)
         return type(self)(**p)
 
+    # persistence / identity ------------------------------------------------
+    def state(self) -> Dict[str, Any]:
+        """Fitted state as a plain dict — the sklearn convention of trailing
+        underscores marks fitted attributes, so the default collects those.
+        Families whose fitted state is an object graph (trees) override
+        this to return arrays, keeping bundles array-only and fingerprints
+        deterministic. Empty for an unfitted instance."""
+        return {k: v for k, v in vars(self).items()
+                if k.endswith("_") and not k.startswith("_")}
+
+    def load_state(self, state: Dict[str, Any]) -> "BaseClassifier":
+        for k, v in state.items():
+            setattr(self, k, v)
+        return self
+
+    def fingerprint(self) -> str:
+        """Stable hash of class + hyperparameters + fitted state; changes on
+        every refit, which is what lets the engine version its plan cache
+        off the served model automatically."""
+        from repro.engine.fingerprint import component_fingerprint
+        return component_fingerprint(self)
+
     # subclass contract -----------------------------------------------------
     def fit(self, x: np.ndarray, y: np.ndarray) -> "BaseClassifier":
         raise NotImplementedError

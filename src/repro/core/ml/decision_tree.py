@@ -104,6 +104,33 @@ class DecisionTreeClassifier(BaseClassifier):
         node.right = self._build(x[~mask], y[~mask], depth + 1)
         return node
 
+    # -- persistence ----------------------------------------------------------
+    def state(self) -> dict:
+        """Fitted tree as flat node arrays (schema of ``tree_to_arrays``) —
+        no linked ``_Node`` objects leave the process, so bundle payloads
+        and fingerprints are plain deterministic arrays."""
+        if not hasattr(self, "root_"):
+            return {}
+        from .forest_jnp import tree_to_arrays
+        f, t, lf, rg, v, _ = tree_to_arrays(self.root_, self.n_classes_,
+                                            normalize=False)
+        return dict(n_classes_=int(self.n_classes_),
+                    feature=np.asarray(f, np.int32),
+                    threshold=np.asarray(t, np.float64),
+                    left=np.asarray(lf, np.int32),
+                    right=np.asarray(rg, np.int32),
+                    value=np.asarray(v, np.float64))
+
+    def load_state(self, state: dict) -> "DecisionTreeClassifier":
+        if not state:
+            return self
+        from .forest_jnp import arrays_to_tree
+        self.n_classes_ = int(state["n_classes_"])
+        self.root_ = arrays_to_tree(state["feature"], state["threshold"],
+                                    state["left"], state["right"],
+                                    state["value"])
+        return self
+
     # -- inference ------------------------------------------------------------
     def _leaf_counts(self, x: np.ndarray) -> np.ndarray:
         out = np.empty((x.shape[0], self.n_classes_))

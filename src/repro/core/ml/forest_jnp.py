@@ -22,8 +22,8 @@ from typing import List, NamedTuple
 
 import numpy as np
 
-__all__ = ["ForestArrays", "tree_to_arrays", "forest_to_arrays",
-           "forest_forward_jnp", "forest_forward"]
+__all__ = ["ForestArrays", "tree_to_arrays", "arrays_to_tree",
+           "forest_to_arrays", "forest_forward_jnp", "forest_forward"]
 
 
 class ForestArrays(NamedTuple):
@@ -43,11 +43,13 @@ class ForestArrays(NamedTuple):
     depth: int             # max levels over all trees (python int: static)
 
 
-def tree_to_arrays(root, n_classes: int):
+def tree_to_arrays(root, n_classes: int, normalize: bool = True):
     """DFS-flatten one linked `_Node` tree into parallel lists.
 
     Returns (feature, threshold, left, right, value, depth) python lists —
-    the forest packer pads and stacks them.
+    the forest packer pads and stacks them. ``normalize=False`` keeps the
+    raw class counts (the persistence path uses it: renormalizing is not
+    bit-stable, and fingerprints must survive a save/load round trip).
     """
     feats: List[int] = []
     thrs: List[float] = []
@@ -68,7 +70,8 @@ def tree_to_arrays(root, n_classes: int):
         rights.append(i)
         val = np.asarray(node.value, dtype=np.float64)
         assert val.shape == (n_classes,), (val.shape, n_classes)
-        values.append(val / max(float(val.sum()), 1.0))
+        values.append(val / max(float(val.sum()), 1.0) if normalize
+                      else val)
         if parent is not None:
             (rights if is_right else lefts)[parent] = i
         if not is_leaf:
@@ -76,6 +79,25 @@ def tree_to_arrays(root, n_classes: int):
             stack.append((node.right, i, True, level + 1))
             stack.append((node.left, i, False, level + 1))
     return feats, thrs, lefts, rights, values, depth
+
+
+def arrays_to_tree(feature, threshold, left, right, value):
+    """Inverse of :func:`tree_to_arrays`: rebuild the linked ``_Node`` tree
+    from parallel node arrays (leaves are the self-looping rows). Used by
+    ``DecisionTreeClassifier.load_state`` so persisted bundles stay
+    array-only. Iterative — no recursion limit to outgrow."""
+    from .decision_tree import _Node
+
+    nodes = [_Node(np.asarray(value[i], dtype=np.float64))
+             for i in range(len(feature))]
+    for i, node in enumerate(nodes):
+        li, ri = int(left[i]), int(right[i])
+        if li != i or ri != i:
+            node.feature = int(feature[i])
+            node.threshold = float(threshold[i])
+            node.left = nodes[li]
+            node.right = nodes[ri]
+    return nodes[0]
 
 
 def forest_to_arrays(trees, n_classes: int) -> ForestArrays:

@@ -50,6 +50,22 @@ class RandomForestClassifier(BaseClassifier):
             self.trees_.append(tree)
         return self
 
+    # -- persistence ----------------------------------------------------------
+    def state(self) -> dict:
+        """Per-tree flat node arrays (see ``DecisionTreeClassifier.state``)."""
+        if not hasattr(self, "trees_"):
+            return {}
+        return dict(n_classes_=int(self.n_classes_),
+                    trees=[t.state() for t in self.trees_])
+
+    def load_state(self, state: dict) -> "RandomForestClassifier":
+        if not state:
+            return self
+        self.n_classes_ = int(state["n_classes_"])
+        self.trees_ = [DecisionTreeClassifier().load_state(ts)
+                       for ts in state["trees"]]
+        return self
+
     def predict_proba(self, x: np.ndarray) -> np.ndarray:
         x = np.asarray(x, dtype=np.float64)
         acc = np.zeros((x.shape[0], self.n_classes_))

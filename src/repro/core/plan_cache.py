@@ -26,7 +26,7 @@ import pickle
 import tempfile
 import threading
 from collections import OrderedDict
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -159,18 +159,29 @@ class TwoTierPlanCache(PlanCache):
     """
 
     def __init__(self, capacity: int = 4096,
-                 cache_dir: str = DEFAULT_CACHE_DIR, version: str = "v0"):
+                 cache_dir: str = DEFAULT_CACHE_DIR, version: str = "v0",
+                 max_disk_bytes: Optional[int] = None,
+                 max_disk_entries: Optional[int] = None):
         super().__init__(capacity)
         self.cache_dir = cache_dir
         # plans persist across process restarts, so they outlive the model
-        # that chose them: ``version`` namespaces the disk entries, and
-        # bumping it (e.g. after retraining the served selector) makes every
-        # old entry a miss without touching other versions' files
+        # that chose them: ``version`` namespaces the disk entries, and a
+        # new version (SolverEngine derives it from the served model's
+        # fingerprint on every train/load) makes every old entry a miss
+        # without touching other versions' files
         self.version = version
+        # disk-tier budgets: once either is exceeded after a write, plan
+        # files — across ALL versions in the dir, so orphans from retired
+        # fingerprints go first — are evicted LRU-by-mtime
+        self.max_disk_bytes = max_disk_bytes
+        self.max_disk_entries = max_disk_entries
         os.makedirs(cache_dir, exist_ok=True)
         self.disk_hits = 0
         self.disk_writes = 0
         self.disk_errors = 0
+        self.disk_evictions = 0
+        # one sweeper at a time; concurrent writers skip instead of queueing
+        self._evict_lock = threading.Lock()
 
     def _path(self, key: str) -> str:
         return os.path.join(self.cache_dir, f"{key}.{self.version}.plan.pkl")
@@ -181,9 +192,16 @@ class TwoTierPlanCache(PlanCache):
             return None
         try:
             with open(path, "rb") as f:
-                return pickle.load(f)
+                plan = pickle.load(f)
         except (OSError, pickle.UnpicklingError, EOFError):
             return None  # unreadable entry ≡ miss; next put overwrites it
+        try:
+            # a disk hit refreshes mtime so the budget sweep's mtime order
+            # is true LRU (recency of use), not FIFO (recency of write)
+            os.utime(path, None)
+        except OSError:
+            pass
+        return plan
 
     def _tier_hit_locked(self) -> None:
         self.disk_hits += 1
@@ -207,15 +225,90 @@ class TwoTierPlanCache(PlanCache):
             return
         with self._lock:
             self.disk_writes += 1
+        self._evict_disk()
+
+    def _evict_disk(self) -> None:
+        """Enforce the disk budgets: drop least-recently-written plan files
+        (mtime order, every version) until within bytes *and* entries.
+
+        Runs outside the memory-tier lock (it is pure disk maintenance);
+        ``_evict_lock`` keeps it single-flight — a writer that finds a sweep
+        already running skips rather than queueing. That makes the budget a
+        *soft* bound under concurrency (a file written after the running
+        sweep's listdir survives until the next write triggers a sweep),
+        which is the right trade for a cache: bounded drift, no writer ever
+        blocked on another's sweep. A file another process removed
+        mid-sweep is simply skipped.
+        """
+        if self.max_disk_bytes is None and self.max_disk_entries is None:
+            return
+        if not self._evict_lock.acquire(blocking=False):
+            return
+        try:
+            entries = []
+            for f in os.listdir(self.cache_dir):
+                if not f.endswith(".plan.pkl"):
+                    continue
+                try:
+                    st = os.stat(os.path.join(self.cache_dir, f))
+                except OSError:
+                    continue
+                entries.append((st.st_mtime, st.st_size, f))
+            entries.sort()  # oldest first
+            total = sum(e[1] for e in entries)
+            count = len(entries)
+            evicted = 0
+            for mtime, size, f in entries:
+                over_bytes = (self.max_disk_bytes is not None
+                              and total > self.max_disk_bytes)
+                over_count = (self.max_disk_entries is not None
+                              and count > self.max_disk_entries)
+                if not over_bytes and not over_count:
+                    break
+                try:
+                    os.unlink(os.path.join(self.cache_dir, f))
+                except OSError:
+                    continue
+                total -= size
+                count -= 1
+                evicted += 1
+            if evicted:
+                with self._lock:
+                    self.disk_evictions += evicted
+        finally:
+            self._evict_lock.release()
 
     def _suffix(self) -> str:
         return f".{self.version}.plan.pkl"
 
     # disk-only maintenance: no memory-tier state involved, so no lock —
     # holding it across a listdir/unlink sweep would stall warm-path gets
+    def _disk_usage(self) -> "Tuple[int, int]":
+        """One scandir pass → (entries of *this* version, bytes of *all*
+        versions). Entries are what this cache can hit; bytes are what the
+        budget is charged against (orphaned versions still occupy disk)."""
+        entries = 0
+        total = 0
+        suffix = self._suffix()
+        with os.scandir(self.cache_dir) as it:
+            for e in it:
+                if not e.name.endswith(".plan.pkl"):
+                    continue
+                if e.name.endswith(suffix):
+                    entries += 1
+                try:
+                    total += e.stat().st_size
+                except OSError:
+                    pass
+        return entries, total
+
     def disk_entries(self) -> int:
-        return sum(1 for f in os.listdir(self.cache_dir)
-                   if f.endswith(self._suffix()))
+        return self._disk_usage()[0]
+
+    def disk_bytes(self) -> int:
+        """Total size of plan files in the dir (all versions — what the
+        byte budget is charged against)."""
+        return self._disk_usage()[1]
 
     def clear_disk(self) -> None:
         for f in os.listdir(self.cache_dir):
@@ -226,13 +319,17 @@ class TwoTierPlanCache(PlanCache):
         with self._lock:
             super().reset_stats()
             self.disk_hits = self.disk_writes = self.disk_errors = 0
+            self.disk_evictions = 0
 
     def stats(self) -> Dict[str, float]:
-        entries = self.disk_entries()  # listdir outside the lock
+        entries, nbytes = self._disk_usage()  # one scan, outside the lock
         with self._lock:
             s = super().stats()
             s.update(disk_hits=self.disk_hits, disk_writes=self.disk_writes,
                      disk_errors=self.disk_errors,
+                     disk_evictions=self.disk_evictions,
                      memory_hits=self.hits - self.disk_hits,
-                     disk_entries=entries)
+                     disk_entries=entries, disk_bytes=nbytes,
+                     max_disk_bytes=self.max_disk_bytes,
+                     max_disk_entries=self.max_disk_entries)
             return s

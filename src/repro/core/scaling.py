@@ -1,11 +1,21 @@
-"""Feature normalization: Max-Min scaling and Standardization (paper §4.2)."""
+"""Feature normalization: Max-Min scaling and Standardization (paper §4.2).
+
+Scalers register in :data:`repro.engine.SCALER_REGISTRY`; the legacy
+``SCALERS`` name is that registry (``Mapping``-compatible), so
+``SCALERS[name]()`` keeps working and new scalers plug in with
+``@register_scaler("name")``.
+"""
 from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["MinMaxScaler", "StandardScaler", "IdentityScaler", "SCALERS"]
+from repro.engine.registry import SCALER_REGISTRY, register_scaler
+
+__all__ = ["MinMaxScaler", "StandardScaler", "IdentityScaler", "SCALERS",
+           "SCALER_REGISTRY", "register_scaler"]
 
 
+@register_scaler("none")
 class IdentityScaler:
     def fit(self, x: np.ndarray) -> "IdentityScaler":
         return self
@@ -22,7 +32,13 @@ class IdentityScaler:
     def load_state(self, state: dict) -> None:
         pass
 
+    def fingerprint(self) -> str:
+        """Stable hash of class + fitted state (see engine.fingerprint)."""
+        from repro.engine.fingerprint import component_fingerprint
+        return component_fingerprint(self)
 
+
+@register_scaler("minmax")
 class MinMaxScaler(IdentityScaler):
     def fit(self, x: np.ndarray) -> "MinMaxScaler":
         x = np.asarray(x, dtype=np.float64)
@@ -41,6 +57,7 @@ class MinMaxScaler(IdentityScaler):
         self.min_, self.scale_ = state["min"], state["scale"]
 
 
+@register_scaler("standard")
 class StandardScaler(IdentityScaler):
     def fit(self, x: np.ndarray) -> "StandardScaler":
         x = np.asarray(x, dtype=np.float64)
@@ -59,5 +76,4 @@ class StandardScaler(IdentityScaler):
         self.mean_, self.std_ = state["mean"], state["std"]
 
 
-SCALERS = {"minmax": MinMaxScaler, "standard": StandardScaler,
-           "none": IdentityScaler}
+SCALERS = SCALER_REGISTRY

@@ -16,16 +16,17 @@ from __future__ import annotations
 
 import pickle
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.features import (extract_features, extract_features_batch,
-                                 extract_features_batch_jnp, pad_csr_batch)
+from repro.core.features import pad_csr_batch
 from repro.core.labeling import LabeledDataset
 from repro.core.ml import MODEL_ZOO, BaseClassifier, accuracy_score
 from repro.core.model_selection import GridSearchCV, train_test_split
 from repro.core.scaling import SCALERS
+from repro.engine.registry import FeatureSet, get_feature_set
 from repro.sparse.csr import CSRMatrix
 
 __all__ = ["ReorderSelector", "DEFAULT_GRIDS", "train_selector",
@@ -75,10 +76,18 @@ FAST_GRIDS: Dict[str, Dict[str, Sequence]] = {
 
 
 class ReorderSelector:
-    def __init__(self, model: BaseClassifier, scaler, algorithms: List[str]):
+    def __init__(self, model: BaseClassifier, scaler, algorithms: List[str],
+                 feature_set: str = "paper12"):
         self.model = model
         self.scaler = scaler
         self.algorithms = algorithms
+        # registry name of the feature schema this selector was trained on
+        # (resolved lazily; bundles persist and validate it)
+        self.feature_set = feature_set
+
+    def _fs(self) -> FeatureSet:
+        # getattr: pre-feature-set pickles lack the attribute
+        return get_feature_set(getattr(self, "feature_set", "paper12"))
 
     # -- inference -----------------------------------------------------------
     def predict_features(self, feats: np.ndarray) -> np.ndarray:
@@ -88,7 +97,7 @@ class ReorderSelector:
     def select(self, a: CSRMatrix) -> Tuple[str, float]:
         """Returns (algorithm name, prediction seconds) — Table 5's columns."""
         t0 = time.perf_counter()
-        feats = extract_features(a)
+        feats = self._fs().extract(a)
         idx = int(self.predict_features(feats)[0])
         return self.algorithms[idx], time.perf_counter() - t0
 
@@ -105,12 +114,14 @@ class ReorderSelector:
         """
         assert path in ("host", "device"), path
         t0 = time.perf_counter()
-        if path == "device":
-            feats = extract_features_batch_jnp(
+        fs = self._fs()
+        if path == "device" and fs.extract_batch_jnp is not None:
+            # device featurizers consume the padded-CSR wire format
+            feats = fs.extract_batch_jnp(
                 pad_csr_batch(mats, bucket=True), use_pallas=use_pallas)
             idx = self._predict_device(feats)
-        else:
-            idx = self.predict_features(extract_features_batch(mats))
+        else:  # host path, or a feature set with no device extractor
+            idx = self.predict_features(fs.batch(mats))
         names = [self.algorithms[int(i)] for i in idx]
         return names, time.perf_counter() - t0
 
@@ -172,15 +183,34 @@ class ReorderSelector:
                 if not k.startswith("_")}
 
     def save(self, path: str) -> None:
+        """Deprecated raw-pickle persistence — prefer the versioned,
+        validated :class:`repro.engine.SelectorBundle` (which
+        ``SolverEngine.save`` writes). Kept as a shim for old callers."""
+        warnings.warn(
+            "ReorderSelector.save/load raw pickles are deprecated; use "
+            "SolverEngine.save / SelectorBundle.from_selector instead",
+            DeprecationWarning, stacklevel=2)
         with open(path, "wb") as f:
             pickle.dump(self, f)
 
     @staticmethod
     def load(path: str) -> "ReorderSelector":
+        """Deprecated twin of :meth:`save`; loads either a raw pickle or a
+        SelectorBundle file (so callers migrate one side at a time)."""
+        warnings.warn(
+            "ReorderSelector.save/load raw pickles are deprecated; use "
+            "SolverEngine.load / SelectorBundle.load instead",
+            DeprecationWarning, stacklevel=2)
         with open(path, "rb") as f:
             obj = pickle.load(f)
-        assert isinstance(obj, ReorderSelector)
-        return obj
+        if isinstance(obj, ReorderSelector):
+            return obj
+        from repro.engine.bundle import SelectorBundle, _MAGIC
+
+        if isinstance(obj, dict) and obj.get("magic") == _MAGIC:
+            return SelectorBundle.from_envelope(obj).to_selector()
+        raise TypeError(f"{path} holds {type(obj).__name__}, not a "
+                        "ReorderSelector or SelectorBundle")
 
 
 def train_selector(
@@ -192,21 +222,32 @@ def train_selector(
     cv: int = 5,
     grid: Optional[Dict[str, Sequence]] = None,
     fast: bool = False,
+    feature_set: Optional[str] = None,
 ):
     """Grid-search + refit a selector; returns (selector, report dict).
 
+    ``model_name``/``scaling``/``feature_set`` are registry names (unknown
+    ones raise :class:`repro.engine.RegistryLookupError` with suggestions).
+    ``feature_set`` defaults to the set the dataset was featurized with.
     The report carries everything the paper's evaluation needs: test
     accuracy, indices of the split, per-scenario totals (AMD / predicted /
     ideal — Table 6), and the mean speedup vs AMD (the 1.45× claim).
     """
+    fs_name = feature_set or getattr(ds, "feature_set", None) or "paper12"
+    fs = get_feature_set(fs_name)
     x, y = ds.features, ds.labels
+    if x.shape[1] != fs.dim:
+        raise ValueError(
+            f"dataset features have dim {x.shape[1]} but feature set "
+            f"{fs_name!r} has {fs.dim} ({list(fs.names)})")
     xtr, xte, ytr, yte, itr, ite = train_test_split(x, y, test_size, seed)
     scaler = SCALERS[scaling]().fit(xtr)
     grids = FAST_GRIDS if fast else DEFAULT_GRIDS
-    gs = GridSearchCV(MODEL_ZOO[model_name](), grid or grids[model_name],
-                      cv=cv, seed=seed)
+    gs = GridSearchCV(MODEL_ZOO[model_name](),
+                      grid or grids.get(model_name, {}), cv=cv, seed=seed)
     gs.fit(scaler.transform(xtr), ytr)
-    sel = ReorderSelector(gs.best_model_, scaler, list(ds.algorithms))
+    sel = ReorderSelector(gs.best_model_, scaler, list(ds.algorithms),
+                          feature_set=fs_name)
 
     pred = sel.predict_features(xte)
     acc = accuracy_score(yte, pred)

@@ -1,0 +1,74 @@
+"""``repro.engine`` — the single production API for the paper's deliverable.
+
+One facade covers the whole lifecycle::
+
+    from repro.engine import EngineConfig, SolverEngine
+
+    engine = SolverEngine(EngineConfig(model="random_forest"))
+    engine.train(dataset)              # grid-search + refit, fingerprinted
+    name, dt = engine.select(A)        # algorithm name for one matrix
+    plan = engine.plan(A)              # cached ExecutionPlan (two-tier)
+    result = engine.solve(A, b)        # plan + numeric factor + solve
+    server = engine.serve()            # AsyncPlanServer bound to the engine
+    engine.save("selector.bundle")     # versioned SelectorBundle artifact
+    engine = SolverEngine.load("selector.bundle")
+
+Underneath: four capability registries (reorderings, models, scalers,
+feature sets — decorator-registered, metadata-carrying, shared with the
+legacy dict names), versioned :class:`SelectorBundle` persistence instead
+of raw pickles, and model/scaler ``fingerprint()``s that the engine threads
+into the plan cache as its version — retraining automatically invalidates
+every previously persisted plan.
+
+The registry surface imports eagerly (stdlib-only); the facade classes load
+lazily on first attribute access so ``import repro.engine`` is cheap and
+core modules can import the registries without cycles.
+"""
+from .registry import (FEATURE_SET_REGISTRY, MODEL_REGISTRY,
+                       REORDERING_REGISTRY, SCALER_REGISTRY,
+                       DuplicateNameError, FeatureSet, Registry,
+                       RegistryEntry, RegistryError, RegistryLookupError,
+                       get_feature_set, register_feature_set, register_model,
+                       register_reordering, register_scaler)
+
+__all__ = [
+    # registries
+    "Registry", "RegistryEntry", "RegistryError", "DuplicateNameError",
+    "RegistryLookupError", "FeatureSet",
+    "REORDERING_REGISTRY", "MODEL_REGISTRY", "SCALER_REGISTRY",
+    "FEATURE_SET_REGISTRY",
+    "register_reordering", "register_model", "register_scaler",
+    "register_feature_set", "get_feature_set",
+    # fingerprints
+    "fingerprint_state", "component_fingerprint", "combine_fingerprints",
+    # facade (lazy)
+    "EngineConfig", "SolverEngine", "EngineError",
+    "SelectorBundle", "BundleValidationError", "BUNDLE_SCHEMA_VERSION",
+]
+
+_LAZY = {
+    "fingerprint_state": "repro.engine.fingerprint",
+    "component_fingerprint": "repro.engine.fingerprint",
+    "combine_fingerprints": "repro.engine.fingerprint",
+    "EngineConfig": "repro.engine.config",
+    "SolverEngine": "repro.engine.core",
+    "EngineError": "repro.engine.core",
+    "SelectorBundle": "repro.engine.bundle",
+    "BundleValidationError": "repro.engine.bundle",
+    "BUNDLE_SCHEMA_VERSION": "repro.engine.bundle",
+}
+
+
+def __getattr__(name):  # PEP 562: facade classes resolve on first touch
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    value = getattr(importlib.import_module(mod), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

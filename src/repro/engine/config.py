@@ -1,0 +1,59 @@
+"""Engine configuration: one dataclass for the whole serving stack."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.plan_cache import DEFAULT_CACHE_DIR
+
+__all__ = ["EngineConfig", "DEFAULT_CACHE_DIR"]
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Everything a :class:`SolverEngine` composes, in one place.
+
+    Capability fields (``model``, ``scaling``, ``feature_set``,
+    ``algorithms``) are *registry names*, so swapping any of them — or a
+    third-party registration — is a config edit, not a code edit.
+    """
+
+    # capability selection (registry names)
+    model: str = "random_forest"
+    scaling: str = "standard"
+    feature_set: str = "paper12"
+    # None → adopt the label set of the training dataset / loaded bundle;
+    # set it to *assert* the labels (train() rejects a dataset whose
+    # algorithm list disagrees)
+    algorithms: Optional[Sequence[str]] = None
+
+    # plan cache: dir=None/"" keeps it in-memory; byte/entry budgets bound
+    # the disk tier (LRU-by-mtime eviction)
+    cache_dir: Optional[str] = DEFAULT_CACHE_DIR
+    cache_capacity: int = 4096
+    cache_max_disk_bytes: Optional[int] = None
+    cache_max_disk_entries: Optional[int] = None
+
+    # featurization / inference path
+    path: str = "device"          # "device" (padded CSR batch) or "host"
+    use_pallas: bool = False
+    batch_size: int = 16
+
+    # async serving
+    max_wait_ms: float = 5.0
+    build_workers: int = 2
+
+    # numeric solve
+    solver: str = "multifrontal"  # or "simplicial"
+    backend: str = "numpy"
+
+    # training
+    fast_grids: bool = False
+    cv: int = 5
+    test_size: float = 0.2
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.path not in ("host", "device"):
+            raise ValueError(f"path must be 'host' or 'device', "
+                             f"got {self.path!r}")

@@ -1,0 +1,260 @@
+""":class:`SolverEngine` — matrix in, best reordering (and solve) out.
+
+The facade composes the registries, the selector pipeline, the
+ExecutionPlan builder/cache, and the async server behind one object with
+one configuration. The key invariant it owns: **the plan cache is always
+versioned by the fingerprint of the fitted model/scaler**. ``train()`` (or
+``load()``) computes the fingerprint and rebuilds the cache front-end with
+it, so a refit makes every previously persisted plan invisible — no manual
+``TwoTierPlanCache(version=...)`` bump anywhere, and a stale plan can never
+be served by a newer model.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .bundle import SelectorBundle
+from .config import EngineConfig
+from .registry import get_feature_set
+
+__all__ = ["SolverEngine", "EngineError"]
+
+
+class EngineError(RuntimeError):
+    """Engine misuse: untrained access, config/selector mismatch, etc."""
+
+
+class SolverEngine:
+    """One API for train → select → plan → solve → serve → save/load.
+
+    Build one from a config and train it, attach an existing fitted
+    selector, or load a persisted :class:`SelectorBundle`::
+
+        engine = SolverEngine(EngineConfig(model="random_forest"))
+        engine.train(dataset)
+        engine.solve(A, b)
+        engine.save("selector.bundle")
+        engine = SolverEngine.load("selector.bundle")
+    """
+
+    def __init__(self, config: Optional[EngineConfig] = None,
+                 selector=None):
+        self.config = config if config is not None else EngineConfig()
+        self._selector = None
+        self._fingerprint: Optional[str] = None
+        self._builder = None
+        self.last_report: Optional[Dict[str, Any]] = None
+        if selector is not None:
+            self.attach(selector)
+
+    # -- selector lifecycle --------------------------------------------------
+    @property
+    def selector(self):
+        if self._selector is None:
+            raise EngineError("engine has no trained selector yet — call "
+                              "train(dataset), attach(selector), or "
+                              "SolverEngine.load(path)")
+        return self._selector
+
+    @property
+    def is_trained(self) -> bool:
+        return self._selector is not None
+
+    def attach(self, selector) -> "SolverEngine":
+        """Adopt a fitted ``ReorderSelector`` (feature set must match)."""
+        fs = getattr(selector, "feature_set", "paper12")
+        if fs != self.config.feature_set:
+            raise EngineError(
+                f"selector was trained on feature set {fs!r} but the engine "
+                f"is configured for {self.config.feature_set!r}")
+        self._selector = selector
+        self.refresh_fingerprint()
+        return self
+
+    def train(self, dataset, **overrides) -> Dict[str, Any]:
+        """Grid-search + refit on a :class:`LabeledDataset`; returns the
+        evaluation report. Any ``train_selector`` keyword can be overridden
+        per call (e.g. ``grid=...``); the new fit gets a new fingerprint,
+        which re-versions the plan cache automatically."""
+        from repro.core.selector import train_selector
+
+        cfg = self.config
+        if (cfg.algorithms is not None
+                and list(cfg.algorithms) != list(dataset.algorithms)):
+            raise EngineError(
+                f"config asserts algorithms {list(cfg.algorithms)} but the "
+                f"dataset was labeled over {list(dataset.algorithms)} — "
+                "relabel the dataset or drop the config assertion")
+        kwargs: Dict[str, Any] = dict(
+            model_name=cfg.model, scaling=cfg.scaling,
+            feature_set=cfg.feature_set, fast=cfg.fast_grids, cv=cfg.cv,
+            test_size=cfg.test_size, seed=cfg.seed)
+        kwargs.update(overrides)
+        self._selector, report = train_selector(dataset, **kwargs)
+        self.last_report = report
+        self.refresh_fingerprint()
+        return report
+
+    # -- fingerprint → cache version -----------------------------------------
+    @property
+    def fingerprint(self) -> Optional[str]:
+        """Fingerprint of the fitted (model, scaler, features, algorithms);
+        ``None`` while untrained. This exact value versions the plan cache."""
+        return self._fingerprint
+
+    def refresh_fingerprint(self) -> Optional[str]:
+        """Recompute the fingerprint from the live selector and, if it
+        changed, rebuild the cache front-end under the new version.
+        ``train``/``attach``/``load`` call this; call it yourself only after
+        mutating the fitted model out of band."""
+        if self._selector is None:
+            return None
+        fp = SelectorBundle.from_selector(self._selector).fingerprint
+        if fp != self._fingerprint:
+            self._fingerprint = fp
+            self._builder = None  # rebuilt lazily under the new version
+        return fp
+
+    @property
+    def cache_version(self) -> str:
+        if self._fingerprint is None:
+            raise EngineError("no fingerprint before training")
+        return f"sel-{self._fingerprint[:16]}"
+
+    def _get_builder(self):
+        if self._builder is None:
+            from repro.core.plan import PlanBuilder
+            from repro.core.plan_cache import PlanCache, TwoTierPlanCache
+
+            cfg = self.config
+            if cfg.cache_dir:
+                cache = TwoTierPlanCache(
+                    cfg.cache_capacity, cfg.cache_dir,
+                    version=self.cache_version,
+                    max_disk_bytes=cfg.cache_max_disk_bytes,
+                    max_disk_entries=cfg.cache_max_disk_entries)
+            else:
+                cache = PlanCache(cfg.cache_capacity)
+            self._builder = PlanBuilder(
+                self.selector, cache, path=cfg.path,
+                use_pallas=cfg.use_pallas, batch_size=cfg.batch_size)
+        return self._builder
+
+    @property
+    def builder(self):
+        """The fingerprint-versioned :class:`PlanBuilder` (cache included)."""
+        return self._get_builder()
+
+    # -- selection -----------------------------------------------------------
+    def select(self, a) -> Tuple[str, float]:
+        """(algorithm name, prediction seconds) for one matrix."""
+        return self.selector.select(a)
+
+    def select_batch(self, mats: Sequence) -> List[str]:
+        """Algorithm names for a batch via the configured path."""
+        names, _ = self.selector.select_batch(
+            mats, path=self.config.path, use_pallas=self.config.use_pallas)
+        return names
+
+    # -- planning ------------------------------------------------------------
+    def plan(self, a):
+        """Cached :class:`ExecutionPlan` for one matrix."""
+        plan, _ = self._get_builder().get_or_build(a)
+        return plan
+
+    def plan_batch(self, mats: Sequence) -> List:
+        """Plans for a request batch (hits skip every cold stage)."""
+        return self._get_builder().plan_batch(mats)
+
+    # -- solving -------------------------------------------------------------
+    def solve(self, a, b: Optional[np.ndarray] = None) -> Dict[str, Any]:
+        """Plan (cached) + numeric factor + solve; returns the result dict
+        of :func:`repro.core.plan.execute_plan` (x, timings, residual)."""
+        from repro.core.plan import execute_plan
+
+        return execute_plan(a, self.plan(a), b, solver=self.config.solver,
+                            backend=self.config.backend)
+
+    def solve_batch(self, mats: Sequence,
+                    bs: Optional[Sequence[Optional[np.ndarray]]] = None
+                    ) -> List[Dict[str, Any]]:
+        plans = self.plan_batch(mats)
+        from repro.core.plan import execute_plan
+
+        if bs is None:
+            bs = [None] * len(mats)
+        return [execute_plan(a, p, b, solver=self.config.solver,
+                             backend=self.config.backend)
+                for a, p, b in zip(mats, plans, bs)]
+
+    # -- serving -------------------------------------------------------------
+    def serve(self, **overrides):
+        """A fresh :class:`AsyncPlanServer` bound to this engine's builder
+        (and therefore to its fingerprint-versioned cache). Keyword
+        overrides pass through (``batch_size``, ``max_wait_ms``,
+        ``build_workers``)."""
+        from repro.launch.serve_selector import AsyncPlanServer
+
+        cfg = self.config
+        kwargs = dict(batch_size=cfg.batch_size,
+                      max_wait_ms=cfg.max_wait_ms,
+                      build_workers=cfg.build_workers)
+        kwargs.update(overrides)
+        return AsyncPlanServer(self._get_builder(), **kwargs)
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: str, meta: Optional[Dict[str, Any]] = None) -> str:
+        """Persist the fitted selector as a versioned SelectorBundle."""
+        meta = dict(meta or {})
+        if self.last_report is not None:
+            meta.setdefault("test_accuracy",
+                            self.last_report.get("test_accuracy"))
+        return SelectorBundle.from_selector(self.selector,
+                                            meta=meta).save(path)
+
+    @classmethod
+    def load(cls, path: str, config: Optional[EngineConfig] = None
+             ) -> "SolverEngine":
+        """Rebuild an engine from a bundle (validating it), adopting the
+        bundle's feature set when no config is given. A config whose
+        ``feature_set`` disagrees with the bundle is rejected — serving a
+        model on features it was not trained on is never right. The
+        capability fields (model / scaling / algorithms) are synced to what
+        the bundle actually serves, so ``stats()`` and a later ``train()``
+        never misreport the live pipeline; a passed config contributes the
+        cache/serving/solve knobs."""
+        import dataclasses
+
+        bundle = SelectorBundle.load(path)
+        if config is None:
+            config = EngineConfig(feature_set=bundle.feature_set)
+        elif config.feature_set != bundle.feature_set:
+            raise EngineError(
+                f"bundle {path!r} was trained on feature set "
+                f"{bundle.feature_set!r} but the engine config asks for "
+                f"{config.feature_set!r}")
+        config = dataclasses.replace(config, model=bundle.model_name,
+                                     scaling=bundle.scaler_name,
+                                     algorithms=list(bundle.algorithms))
+        engine = cls(config)
+        engine.attach(bundle.to_selector())
+        return engine
+
+    # -- introspection -------------------------------------------------------
+    def feature_set(self):
+        return get_feature_set(self.config.feature_set)
+
+    def stats(self) -> Dict[str, Any]:
+        s = (self._get_builder().stats() if self._selector is not None
+             else {})
+        s.update(fingerprint=self._fingerprint,
+                 model=self.config.model, scaling=self.config.scaling,
+                 feature_set=self.config.feature_set)
+        return s
+
+    def __repr__(self) -> str:
+        fp = self._fingerprint[:12] if self._fingerprint else "untrained"
+        return (f"SolverEngine(model={self.config.model!r}, "
+                f"features={self.config.feature_set!r}, fingerprint={fp})")

@@ -22,6 +22,11 @@ server starts warm.
 
 :class:`SelectorServer` — the PR-1 synchronous, name-only front-end — is
 kept for callers that only want the algorithm label.
+
+The demo entrypoint drives everything through :class:`repro.engine
+.SolverEngine` (``engine.train(ds)`` → ``engine.serve()``), whose
+model-fingerprint cache versioning guarantees a retrained selector never
+replays plans persisted by its predecessor.
 """
 from __future__ import annotations
 
@@ -32,7 +37,7 @@ import queue
 import threading
 import time
 from concurrent.futures import Future
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Sequence
 
 from repro.core.plan import ExecutionPlan, PlanBuilder
 from repro.core.plan_cache import PlanCache, matrix_fingerprint
@@ -332,16 +337,6 @@ class AsyncPlanServer:
 # entrypoint
 # ---------------------------------------------------------------------------
 
-def _train_small_selector(model_name: str, count: int, scale: float,
-                          seed: int) -> Tuple[ReorderSelector, dict]:
-    from repro.core.labeling import load_or_build
-    from repro.core.selector import train_selector
-
-    ds = load_or_build(cache_dir="artifacts", count=count, seed=seed,
-                       size_scale=scale, repeats=1, verbose=True)
-    return train_selector(ds, model_name, "standard", fast=True, cv=3)
-
-
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--requests", type=int, default=256)
@@ -350,6 +345,10 @@ def main() -> None:
     p.add_argument("--cache-dir", default=None,
                    help="persistent plan-cache dir (default "
                         "artifacts/plan_cache; pass '' to stay in-memory)")
+    p.add_argument("--max-disk-mb", type=float, default=None,
+                   help="disk-tier byte budget (LRU-by-mtime eviction)")
+    p.add_argument("--max-disk-entries", type=int, default=None,
+                   help="disk-tier file-count cap")
     p.add_argument("--max-wait-ms", type=float, default=5.0)
     p.add_argument("--build-workers", type=int, default=2)
     p.add_argument("--path", choices=["host", "device"], default="device")
@@ -364,14 +363,33 @@ def main() -> None:
 
     import numpy as np
 
-    from repro.core.plan_cache import (DEFAULT_CACHE_DIR, PlanCache,
-                                       TwoTierPlanCache)
+    from repro.core.labeling import load_or_build
+    from repro.core.plan_cache import DEFAULT_CACHE_DIR
+    from repro.engine import EngineConfig, SolverEngine
     from repro.sparse.dataset import generate_suite
 
-    sel, rep = _train_small_selector(args.model, args.campaign_count,
-                                     args.campaign_scale, args.seed)
+    # one facade: config → train → serve. The engine versions the plan
+    # cache with the fitted model's fingerprint, so a retrained selector
+    # never serves plans persisted by its predecessor — no manual
+    # version= bump here or anywhere.
+    cache_dir = (args.cache_dir if args.cache_dir is not None
+                 else DEFAULT_CACHE_DIR)
+    engine = SolverEngine(EngineConfig(
+        model=args.model, cache_dir=cache_dir or None,
+        cache_capacity=args.cache,
+        cache_max_disk_bytes=(int(args.max_disk_mb * 2**20)
+                              if args.max_disk_mb else None),
+        cache_max_disk_entries=args.max_disk_entries,
+        path=args.path, use_pallas=args.use_pallas, batch_size=args.batch,
+        max_wait_ms=args.max_wait_ms, build_workers=args.build_workers,
+        fast_grids=True, cv=3, seed=0))
+    ds = load_or_build(cache_dir="artifacts", count=args.campaign_count,
+                       seed=args.seed, size_scale=args.campaign_scale,
+                       repeats=1, verbose=True)
+    rep = engine.train(ds)
     print(f"[serve-selector] model={args.model} "
-          f"test_acc={rep['test_accuracy']:.2f}")
+          f"test_acc={rep['test_accuracy']:.2f} "
+          f"fingerprint={engine.fingerprint[:16]}")
 
     pool = list(generate_suite(count=args.distinct, seed=args.seed + 1,
                                size_scale=0.4))
@@ -381,15 +399,7 @@ def main() -> None:
     pop /= pop.sum()
     stream = rng.choice(len(pool), size=args.requests, p=pop)
 
-    cache_dir = (args.cache_dir if args.cache_dir is not None
-                 else DEFAULT_CACHE_DIR)
-    cache = (TwoTierPlanCache(args.cache, cache_dir) if cache_dir
-             else PlanCache(args.cache))
-    builder = PlanBuilder(sel, cache, path=args.path,
-                          use_pallas=args.use_pallas, batch_size=args.batch)
-    server = AsyncPlanServer(builder, batch_size=args.batch,
-                             max_wait_ms=args.max_wait_ms,
-                             build_workers=args.build_workers)
+    server = engine.serve()
     # warm the jit/kernel compile outside the timed region, then zero the
     # metrics so the report reflects steady-state serving (on a later run
     # with a persistent cache dir this warm-up is just a disk hit)
@@ -420,6 +430,9 @@ def main() -> None:
     print(f"[serve-selector] cold stages: select {s['select_calls']} calls "
           f"{s['select_seconds']*1e3:.0f} ms, "
           f"{s['plans_built']} plans built {s['build_seconds']*1e3:.0f} ms")
+    if s.get("max_disk_bytes") or s.get("max_disk_entries"):
+        print(f"[serve-selector] disk budget: {s['disk_bytes']} bytes / "
+              f"{s['disk_entries']} files, {s['disk_evictions']} evictions")
     dist = collections.Counter(pl.algorithm for pl in plans)
     print(f"[serve-selector] plan distribution: {dict(sorted(dist.items()))}")
 

@@ -1,16 +1,27 @@
 """Reordering algorithm registry.
 
 The seven algorithms of the paper's Table 2 plus the natural (identity)
-ordering. The four *label* algorithms used by the selector are
-``rcm``, ``amd``, ``nd``, ``scotch`` (one per category, as in the paper).
+ordering, registered in :data:`repro.engine.REORDERING_REGISTRY` with their
+Table-2 category as metadata. The four *label* algorithms used by the
+selector are ``rcm``, ``amd``, ``nd``, ``scotch`` (one per category, as in
+the paper).
 
-Every entry maps ``CSRMatrix -> perm`` with ``perm[new] = old``.
+Every entry maps ``CSRMatrix -> perm`` with ``perm[new] = old``. The legacy
+``REORDERINGS`` dict is now the registry itself (``Mapping``-compatible);
+third-party orderings plug in with::
+
+    from repro.engine import register_reordering
+
+    @register_reordering("my_order", category="fill-in-reduction")
+    def my_order(a): ...
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List
+from typing import Callable, List, Mapping
 
 import numpy as np
+
+from repro.engine.registry import REORDERING_REGISTRY, register_reordering
 
 from ..csr import CSRMatrix
 from .amd import amd_order, amf_order, md_order, qamd_order
@@ -20,6 +31,8 @@ from .rcm import cm_order, rcm_order
 
 __all__ = [
     "REORDERINGS",
+    "REORDERING_REGISTRY",
+    "register_reordering",
     "LABEL_ALGORITHMS",
     "CATEGORY_OF",
     "get_reordering",
@@ -29,39 +42,53 @@ __all__ = [
 ]
 
 
+@register_reordering("natural", category="identity")
 def natural_order(a: CSRMatrix) -> np.ndarray:
     return np.arange(a.n, dtype=np.int64)
 
 
-REORDERINGS: Dict[str, Callable[[CSRMatrix], np.ndarray]] = {
-    "natural": natural_order,
-    "cm": cm_order,
-    "rcm": rcm_order,
-    "md": md_order,
-    "amd": amd_order,
-    "qamd": qamd_order,
-    "amf": amf_order,
-    "nd": nd_order,
-    "scotch": scotch_order,
-}
+for _name, _fn, _cat in [
+    ("cm", cm_order, "bandwidth-reduction"),
+    ("rcm", rcm_order, "bandwidth-reduction"),
+    ("md", md_order, "fill-in-reduction"),
+    ("amd", amd_order, "fill-in-reduction"),
+    ("qamd", qamd_order, "fill-in-reduction"),
+    ("amf", amf_order, "fill-in-reduction"),
+    ("nd", nd_order, "graph-based"),
+    ("scotch", scotch_order, "hybrid"),
+]:
+    register_reordering(_name, category=_cat)(_fn)
+del _name, _fn, _cat
+
+REORDERINGS = REORDERING_REGISTRY
 
 # The paper's four predictive labels (one per Table 2 category).
 LABEL_ALGORITHMS: List[str] = ["amd", "scotch", "nd", "rcm"]
 
-# Table 2: category per algorithm.
-CATEGORY_OF: Dict[str, str] = {
-    "rcm": "bandwidth-reduction", "cm": "bandwidth-reduction",
-    "amd": "fill-in-reduction", "md": "fill-in-reduction",
-    "qamd": "fill-in-reduction", "amf": "fill-in-reduction",
-    "nd": "graph-based",
-    "scotch": "hybrid",
-    "natural": "identity",
-}
+
+class _CategoryView(Mapping):
+    """Live Table-2 category view over the registry metadata (legacy name;
+    late-registered orderings appear here too)."""
+
+    def __getitem__(self, name):
+        return REORDERING_REGISTRY.metadata(name).get("category",
+                                                      "uncategorized")
+
+    def __iter__(self):
+        return iter(REORDERING_REGISTRY)
+
+    def __len__(self):
+        return len(REORDERING_REGISTRY)
+
+
+CATEGORY_OF = _CategoryView()
 
 
 def get_reordering(name: str) -> Callable[[CSRMatrix], np.ndarray]:
-    try:
-        return REORDERINGS[name]
-    except KeyError:
-        raise KeyError(
-            f"unknown reordering {name!r}; available: {sorted(REORDERINGS)}")
+    """Resolve a reordering by name.
+
+    Unknown names raise :class:`repro.engine.RegistryLookupError` (a
+    ``KeyError`` subclass) with did-you-mean suggestions and *no* chained
+    internal traceback.
+    """
+    return REORDERING_REGISTRY[name]

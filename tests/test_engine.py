@@ -1,0 +1,359 @@
+"""repro.engine: registries, SelectorBundle, SolverEngine, fingerprint →
+plan-cache invalidation, and the deprecation shims."""
+import os
+import pickle
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.labeling import LabeledDataset
+from repro.core.plan_cache import TwoTierPlanCache
+from repro.core.selector import ReorderSelector
+from repro.engine import (FEATURE_SET_REGISTRY, MODEL_REGISTRY,
+                          REORDERING_REGISTRY, SCALER_REGISTRY,
+                          BundleValidationError, DuplicateNameError,
+                          EngineConfig, EngineError, RegistryLookupError,
+                          SelectorBundle, SolverEngine, register_reordering)
+from repro.sparse.dataset import grid2d
+from repro.sparse.reorder import LABEL_ALGORITHMS, get_reordering
+
+
+def synth_dataset(seed=0, m=40, dim=12):
+    """Synthetic LabeledDataset — train-path plumbing without a labeling
+    campaign (features are random; only shapes/labels matter here)."""
+    rng = np.random.default_rng(seed)
+    return LabeledDataset(
+        features=rng.standard_normal((m, dim)) + 1.0,
+        labels=rng.integers(0, 4, m),
+        times=rng.uniform(0.01, 0.1, (m, 4)),
+        order_times=np.full((m, 4), 0.001),
+        fills=np.ones((m, 4), np.int64),
+        flops=np.ones((m, 4), np.int64),
+        names=[f"m{i}" for i in range(m)], groups=["g"] * m,
+        dims=np.full(m, 100), nnzs=np.full(m, 500),
+        algorithms=list(LABEL_ALGORITHMS))
+
+
+def make_engine(tmp_path, model="decision_tree", seed=0, **cfg):
+    cfg.setdefault("cache_dir", str(tmp_path / "plan_cache"))
+    engine = SolverEngine(EngineConfig(model=model, path="host",
+                                       fast_grids=True, cv=3, **cfg))
+    engine.train(synth_dataset(seed=seed))
+    return engine
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+def test_registry_duplicate_name_conflict():
+    @register_reordering("_test_dup_order")
+    def order_a(a):
+        return np.arange(a.n)
+
+    try:
+        # same object re-registered: harmless no-op
+        register_reordering("_test_dup_order")(order_a)
+        with pytest.raises(DuplicateNameError):
+            @register_reordering("_test_dup_order")
+            def order_b(a):
+                return np.arange(a.n)
+    finally:
+        REORDERING_REGISTRY.unregister("_test_dup_order")
+
+
+def test_registry_reregistration_of_reloaded_object_is_tolerated():
+    # importlib.reload re-executes decorators with fresh objects that share
+    # the original's module + qualname; that must replace, not conflict
+    def _make():
+        def _prov_order(a):
+            return np.arange(a.n)
+        return _prov_order
+
+    f1, f2 = _make(), _make()
+    try:
+        register_reordering("_test_reload_order")(f1)
+        register_reordering("_test_reload_order")(f2)  # no DuplicateNameError
+        assert REORDERING_REGISTRY["_test_reload_order"] is f2
+    finally:
+        REORDERING_REGISTRY.unregister("_test_reload_order")
+    import importlib
+
+    import repro.core.scaling as scaling
+    importlib.reload(scaling)  # re-registers minmax/standard/none: no raise
+    assert "standard" in SCALER_REGISTRY
+
+
+def test_registry_lookup_error_is_consistent_and_suggests():
+    for registry in (REORDERING_REGISTRY, MODEL_REGISTRY, SCALER_REGISTRY,
+                     FEATURE_SET_REGISTRY):
+        with pytest.raises(RegistryLookupError):
+            registry["no_such_name"]
+    with pytest.raises(RegistryLookupError, match="did you mean"):
+        MODEL_REGISTRY["random_forst"]
+    # RegistryLookupError is a KeyError, so legacy handlers still catch it
+    with pytest.raises(KeyError):
+        SCALER_REGISTRY["no_such_scaler"]
+
+
+def test_get_reordering_no_chained_traceback():
+    with pytest.raises(RegistryLookupError) as ei:
+        get_reordering("amdd")
+    assert ei.value.__cause__ is None
+    assert ei.value.__suppress_context__  # raise ... from None
+    assert "amd" in str(ei.value)  # suggestion present
+
+
+def test_legacy_dict_shims_importable_and_mapping_like():
+    from repro.core.ml import MODEL_ZOO
+    from repro.core.scaling import SCALERS
+    from repro.sparse.reorder import CATEGORY_OF, REORDERINGS
+
+    assert "amd" in REORDERINGS and callable(REORDERINGS["amd"])
+    assert sorted(MODEL_ZOO)  # iterable
+    assert SCALERS["standard"]().fit(np.ones((3, 2)))
+    assert CATEGORY_OF["rcm"] == "bandwidth-reduction"
+    assert len(CATEGORY_OF) == len(REORDERINGS)
+
+
+def test_registry_metadata():
+    assert REORDERING_REGISTRY.metadata("amd")["category"] == \
+        "fill-in-reduction"
+    assert MODEL_REGISTRY.metadata("random_forest")["device_capable"]
+    assert not MODEL_REGISTRY.metadata("knn")["device_capable"]
+    fs = FEATURE_SET_REGISTRY["paper12"]
+    assert fs.dim == 12 and fs.device_capable
+    assert FEATURE_SET_REGISTRY["extended19"].dim == 19
+
+
+# ---------------------------------------------------------------------------
+# SelectorBundle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["decision_tree", "random_forest",
+                                   "naive_bayes"])
+def test_bundle_roundtrip_preserves_predictions(tmp_path, model):
+    engine = make_engine(tmp_path, model=model)
+    path = engine.save(str(tmp_path / "sel.bundle"))
+    engine2 = SolverEngine.load(path)
+    x = synth_dataset(seed=3).features[:10]
+    np.testing.assert_array_equal(engine.selector.predict_features(x),
+                                  engine2.selector.predict_features(x))
+    assert engine2.fingerprint == engine.fingerprint
+    assert engine2.config.feature_set == "paper12"
+
+
+def test_bundle_rejects_feature_schema_mismatch(tmp_path):
+    engine = make_engine(tmp_path)
+    bundle = SelectorBundle.from_selector(engine.selector)
+    bundle.feature_names = bundle.feature_names[:-1] + ["bogus_feature"]
+    bundle.fingerprint = bundle.compute_fingerprint()  # internally coherent
+    with pytest.raises(BundleValidationError, match="feature schema"):
+        bundle.validate()
+    p = str(tmp_path / "bad.bundle")
+    bundle.save(p)
+    with pytest.raises(BundleValidationError, match="feature schema"):
+        SelectorBundle.load(p)
+
+
+def test_engine_load_rejects_feature_set_mismatch(tmp_path):
+    engine = make_engine(tmp_path)
+    path = engine.save(str(tmp_path / "sel.bundle"))
+    with pytest.raises(EngineError, match="feature set"):
+        SolverEngine.load(path, EngineConfig(feature_set="extended19"))
+
+
+def test_bundle_rejects_tampered_payload(tmp_path):
+    engine = make_engine(tmp_path, model="naive_bayes")
+    bundle = SelectorBundle.from_selector(engine.selector)
+    bundle.model_state["theta_"] = bundle.model_state["theta_"] + 1.0
+    with pytest.raises(BundleValidationError, match="fingerprint"):
+        bundle.validate()
+
+
+def test_bundle_rejects_unknown_registry_names(tmp_path):
+    engine = make_engine(tmp_path)
+    bundle = SelectorBundle.from_selector(engine.selector)
+    bundle.model_name = "not_a_model"
+    bundle.fingerprint = bundle.compute_fingerprint()
+    with pytest.raises(BundleValidationError, match="unknown model"):
+        bundle.validate()
+
+
+def test_legacy_raw_pickle_shim(tmp_path):
+    engine = make_engine(tmp_path)
+    p = str(tmp_path / "legacy.pkl")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        engine.selector.save(p)  # old raw-pickle format
+    with pytest.warns(DeprecationWarning, match="legacy raw"):
+        bundle = SelectorBundle.load(p)
+    x = synth_dataset(seed=3).features[:5]
+    np.testing.assert_array_equal(
+        bundle.to_selector().predict_features(x),
+        engine.selector.predict_features(x))
+    # and the deprecated loader reads new bundles (migrate one side first)
+    bp = engine.save(str(tmp_path / "new.bundle"))
+    with pytest.warns(DeprecationWarning):
+        sel = ReorderSelector.load(bp)
+    np.testing.assert_array_equal(sel.predict_features(x),
+                                  engine.selector.predict_features(x))
+
+
+def test_train_rejects_mismatched_algorithm_assertion(tmp_path):
+    engine = SolverEngine(EngineConfig(algorithms=["amd", "rcm"],
+                                       cache_dir=None, path="host",
+                                       fast_grids=True, cv=3))
+    with pytest.raises(EngineError, match="algorithms"):
+        engine.train(synth_dataset())  # dataset labels all four
+
+
+def test_load_syncs_capability_fields_to_bundle(tmp_path):
+    engine = make_engine(tmp_path, model="naive_bayes")
+    path = engine.save(str(tmp_path / "sel.bundle"))
+    # config lies about the model family; load must sync it to the truth
+    engine2 = SolverEngine.load(path, EngineConfig(model="mlp",
+                                                   cache_dir=None,
+                                                   path="host"))
+    assert engine2.config.model == "naive_bayes"
+    assert engine2.stats()["model"] == "naive_bayes"
+    assert list(engine2.config.algorithms) == list(LABEL_ALGORITHMS)
+    assert engine2.config.cache_dir is None  # serving knobs kept
+
+
+def test_train_validates_feature_dim():
+    engine = SolverEngine(EngineConfig(feature_set="extended19",
+                                       cache_dir=None, path="host",
+                                       fast_grids=True, cv=3))
+    with pytest.raises(ValueError, match="dim"):
+        engine.train(synth_dataset(dim=12))
+
+
+# ---------------------------------------------------------------------------
+# fingerprint → plan-cache invalidation (the ROADMAP stale-plan hazard)
+# ---------------------------------------------------------------------------
+
+def test_refit_invalidates_persisted_plans(tmp_path):
+    a = grid2d(12, 12, "g12")
+    cache_dir = str(tmp_path / "shared_cache")
+
+    engine = make_engine(tmp_path, seed=0, cache_dir=cache_dir)
+    fp1 = engine.fingerprint
+    engine.plan(a)
+    engine.plan(a)
+    s = engine.builder.stats()
+    assert s["plans_built"] == 1 and s["hits"] == 1  # warm within one fit
+    assert s["disk_entries"] == 1
+
+    # refit through the engine: new fingerprint, same cache dir
+    engine.train(synth_dataset(seed=9))
+    assert engine.fingerprint != fp1
+    builder2 = engine.builder
+    engine.plan(a)
+    s2 = builder2.stats()
+    # the old plan file is still on disk, but invisible under the new
+    # version: the first plan() after retraining MUST rebuild, not hit
+    assert s2["misses"] >= 1 and s2["plans_built"] == 1
+    assert s2["hits"] == 0
+    files = os.listdir(cache_dir)
+    assert len(files) == 2  # one plan file per fingerprint version
+    assert len({f.split(".")[1] for f in files}) == 2
+
+    # same fit → same fingerprint → the disk tier survives a process
+    # restart (fresh engine, identical training) and serves warm
+    engine3 = make_engine(tmp_path, seed=9, cache_dir=cache_dir)
+    assert engine3.fingerprint == engine.fingerprint
+    engine3.plan(a)
+    s3 = engine3.builder.stats()
+    assert s3["hits"] == 1 and s3["plans_built"] == 0
+
+
+def test_engine_serve_and_solve(tmp_path):
+    engine = make_engine(tmp_path)
+    a = grid2d(10, 10, "g10")
+    res = engine.solve(a)
+    assert res["residual"] < 1e-8
+    assert res["algorithm"] in LABEL_ALGORITHMS
+    server = engine.serve(build_workers=1)
+    try:
+        plans = server.handle([a, grid2d(8, 8, "g8"), a])
+        assert plans[0].fingerprint == plans[2].fingerprint
+    finally:
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# plan-cache disk-tier bounds (ROADMAP item)
+# ---------------------------------------------------------------------------
+
+def _put_many(cache, n, blob_size=2000):
+    for i in range(n):
+        cache.put(f"key{i:03d}", b"x" * blob_size)
+
+
+def test_disk_tier_entry_cap(tmp_path):
+    cache = TwoTierPlanCache(capacity=64, cache_dir=str(tmp_path),
+                             max_disk_entries=3)
+    _put_many(cache, 6)
+    s = cache.stats()
+    assert s["disk_entries"] <= 3
+    assert s["disk_evictions"] >= 3
+    assert s["max_disk_entries"] == 3
+    # memory tier still answers everything (bounds are disk-only)
+    assert all(cache.get(f"key{i:03d}") is not None for i in range(6))
+
+
+def test_disk_tier_byte_budget(tmp_path):
+    cache = TwoTierPlanCache(capacity=64, cache_dir=str(tmp_path),
+                             max_disk_bytes=9000)
+    _put_many(cache, 6, blob_size=2000)
+    s = cache.stats()
+    assert s["disk_bytes"] <= 9000
+    assert s["disk_evictions"] >= 1
+    assert s["disk_entries"] < 6
+
+
+def test_disk_eviction_prefers_oldest(tmp_path):
+    cache = TwoTierPlanCache(capacity=64, cache_dir=str(tmp_path),
+                             max_disk_entries=2)
+    for i in range(4):
+        cache.put(f"k{i}", i)
+        # force distinct mtimes so LRU-by-mtime order is deterministic
+        os.utime(cache._path(f"k{i}"), (1_000_000 + i, 1_000_000 + i))
+        cache._evict_disk()
+    kept = sorted(os.listdir(str(tmp_path)))
+    assert [f.split(".")[0] for f in kept] == ["k2", "k3"]
+
+
+def test_disk_hit_refreshes_lru_position(tmp_path):
+    c1 = TwoTierPlanCache(capacity=64, cache_dir=str(tmp_path))
+    for i in range(3):
+        c1.put(f"k{i}", i)
+        os.utime(c1._path(f"k{i}"), (1_000_000 + i, 1_000_000 + i))
+    # fresh cache (cold memory tier): get() is a disk hit → mtime refresh,
+    # so the oldest-written-but-just-used entry survives the sweep
+    c2 = TwoTierPlanCache(capacity=64, cache_dir=str(tmp_path),
+                          max_disk_entries=2)
+    assert c2.get("k0") == 0
+    c2.put("k9", 9)
+    kept = {f.split(".")[0] for f in os.listdir(str(tmp_path))}
+    assert kept == {"k0", "k9"}
+
+
+# ---------------------------------------------------------------------------
+# import gate (mirrors the CI step)
+# ---------------------------------------------------------------------------
+
+def test_engine_imports_clean_of_deprecation_warnings():
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-W", "error::DeprecationWarning", "-c",
+         "import repro.engine; import repro.core.selector"],
+        capture_output=True, text=True, env=env)
+    assert proc.returncode == 0, proc.stderr
