@@ -1,6 +1,7 @@
 """Selection serving benchmarks: featurizer throughput and end-to-end plans.
 
     PYTHONPATH=src python -m benchmarks.selector_throughput [--use-pallas]
+    PYTHONPATH=src python -m benchmarks.selector_throughput --devices 4
     PYTHONPATH=src python -m benchmarks.selector_throughput --mode e2e
 
 Both modes drive :class:`repro.engine.SolverEngine` — the same facade the
@@ -14,6 +15,14 @@ at batch sizes 1/8/64 on the host (per-matrix numpy) path and the device
 overhead across the batch — the spread between batch=1 and batch=64 is the
 argument for request batching in ``repro.launch.serve_selector``.
 
+``--devices N`` measures the *scaling curve* of the distributed serving
+plane: it forces N host-platform virtual devices (XLA_FLAGS, set before
+jax initializes), then runs the device path on serving meshes of every
+power-of-two width up to N — same process, same matrices — reporting
+aggregate and per-shard (per-device) matrices/sec for each width. The
+1-device row is the same shard_map code on the degenerate mesh, so the
+comparison isolates the mesh width.
+
 ``--mode e2e`` measures the full request lifecycle — select + reorder +
 symbolic + numeric solve — through the :class:`ExecutionPlan` pipeline,
 cold (empty two-tier plan cache: every stage runs) vs. warm (every
@@ -26,6 +35,7 @@ smoke runs (CI uses a tiny suite).
 from __future__ import annotations
 
 import argparse
+import os
 import tempfile
 import time
 
@@ -36,10 +46,9 @@ try:
 except ImportError:  # run as a loose script: benchmarks/ on sys.path
     from common import ART
 
-from repro.core.labeling import load_or_build
-from repro.core.plan import execute_plan
-from repro.engine import EngineConfig, SolverEngine
-from repro.sparse.dataset import generate_suite
+# NOTE: repro/jax imports happen inside main(), *after* --devices has had
+# the chance to set XLA_FLAGS — the host-platform virtual device count is
+# fixed at backend initialization.
 
 BATCH_SIZES = (1, 8, 64)
 
@@ -79,6 +88,8 @@ def bench_e2e(engine, mats, repeats: int = 2) -> None:
     fingerprint + numeric only. The engine was built over a fresh temp
     cache dir, which keeps the cold pass honest across runs.
     """
+    from repro.core.plan import execute_plan
+
     rng = np.random.default_rng(0)
     builder = engine.builder
     # jit warm-up outside the timed region: per-request selection over
@@ -133,10 +144,60 @@ def bench_e2e(engine, mats, repeats: int = 2) -> None:
           f"{1e3*np.mean(warm_lat):.2f} ms, {speedup:.1f}x)")
 
 
+def _mesh_widths(n: int):
+    """Powers of two up to n, n included: 4 → [1, 2, 4]; 6 → [1, 2, 4, 6]."""
+    w, out = 1, []
+    while w < n:
+        out.append(w)
+        w *= 2
+    out.append(n)
+    return out
+
+
+def bench_devices(engine, mats, args) -> None:
+    """Scaling curve of the sharded featurize→infer path.
+
+    Same pool, same process: for each serving-mesh width up to
+    ``--devices``, install the mesh, re-run batched selection, and report
+    aggregate and per-shard throughput. Every width runs the identical
+    shard_map code — width 1 *is* the degenerate mesh, so row 1 is the
+    single-device baseline the aggregate rows are judged against.
+    """
+    from repro.distributed.meshctx import make_serving_mesh, set_serving_mesh
+
+    bs = max(b for b in BATCH_SIZES if b <= len(mats))
+    print(f"# sharded scaling: pool {len(mats)}, batch {bs}, "
+          f"widths {_mesh_widths(args.devices)}")
+    print("path,batch,devices,agg_matrices_per_sec,per_shard_matrices_per_sec")
+    base = None
+    try:
+        for nd in _mesh_widths(args.devices):
+            set_serving_mesh(make_serving_mesh(nd))
+            rate = bench_path(engine, mats, bs, "device", args.use_pallas)
+            if base is None:
+                base = rate
+            print(f"device,{bs},{nd},{rate:.1f},{rate / nd:.1f}")
+        if args.devices == 1:
+            # nothing to judge: the single width IS the baseline
+            print(f"# 1-device baseline: {base:.1f} matrices/sec")
+        else:
+            speedup = rate / base if base else float("nan")
+            verdict = "OK" if rate > base else "FAIL"
+            print(f"# aggregate above 1-device baseline: {verdict} "
+                  f"({base:.1f} → {rate:.1f} matrices/sec, "
+                  f"{speedup:.2f}x at {args.devices} devices)")
+    finally:
+        set_serving_mesh(None)  # leave the process on the degenerate mesh
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--mode", choices=["throughput", "e2e"],
                    default="throughput")
+    p.add_argument("--devices", type=int, default=None,
+                   help="force N host-platform virtual devices and bench "
+                        "the sharded device path on meshes of width "
+                        "1..N (throughput mode only)")
     p.add_argument("--use-pallas", action="store_true",
                    help="route device reductions through the Pallas kernels")
     p.add_argument("--pool", type=int, default=64)
@@ -147,6 +208,27 @@ def main() -> None:
                    help="labeling-campaign size (shrink for smoke runs)")
     p.add_argument("--campaign-scale", type=float, default=0.35)
     args = p.parse_args()
+
+    if args.devices is not None and args.devices > 1:
+        # must precede jax backend init — which is why the repro imports
+        # below live inside main()
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
+
+    from repro.core.labeling import load_or_build
+    from repro.engine import EngineConfig, SolverEngine
+    from repro.sparse.dataset import generate_suite
+
+    if args.devices is not None:
+        import jax
+
+        if jax.device_count() < args.devices:
+            raise SystemExit(
+                f"--devices {args.devices} but only {jax.device_count()} "
+                f"jax devices materialized (XLA_FLAGS set too late?)")
 
     ds = load_or_build(cache_dir=ART, count=args.campaign_count, seed=7,
                        size_scale=args.campaign_scale, repeats=1,
@@ -167,6 +249,9 @@ def main() -> None:
               f"fingerprint {engine.fingerprint[:12]})")
         if args.mode == "e2e":
             bench_e2e(engine, mats)
+            return
+        if args.devices is not None:
+            bench_devices(engine, mats, args)
             return
         print("path,batch,matrices_per_sec")
         for path in ("host", "device"):

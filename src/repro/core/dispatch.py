@@ -1,0 +1,252 @@
+"""Transport-agnostic plan dispatch: the serving plane's batching core.
+
+:class:`PlanDispatcher` is the deadline micro-batching pipeline that used
+to live inside ``repro.launch.serve_selector.AsyncPlanServer`` (which is
+now a thin alias). Extracting it decouples *how requests arrive* from *how
+they are served*: the in-process async server, the RPC front-end
+(:mod:`repro.launch.rpc`), and tests all push :class:`CSRMatrix` requests
+into the same core and get back futures of
+:class:`repro.core.plan.ExecutionPlan`.
+
+Pipeline shape (unchanged from the original server):
+
+* ``submit`` fingerprints the matrix; a cache hit resolves the returned
+  future immediately (the warm path never enters the queue), a miss is
+  enqueued.
+* One **batcher** thread collects misses until ``batch_size`` requests are
+  waiting or the oldest has aged ``max_wait_ms``, deduplicates by
+  fingerprint, re-checks the cache (a sibling batch may have built the
+  plan meanwhile), and runs the selector's padded feature-batch + device
+  inference — which shard_maps over the active serving mesh, so the cold
+  stage scales with devices — over the remaining structures.
+* ``build_workers`` **builder** threads take per-structure (matrix,
+  algorithm) items, run reorder + symbolic analysis, install the plan in
+  the shared (thread-safe, possibly replica-shared two-tier) cache, and
+  resolve every future waiting on that fingerprint — so plan builds for
+  one micro-batch overlap the next micro-batch's inference.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Sequence
+
+from repro.core.plan import ExecutionPlan, PlanBuilder
+from repro.core.plan_cache import matrix_fingerprint
+from repro.sparse.csr import CSRMatrix
+
+__all__ = ["PlanDispatcher"]
+
+_SENTINEL = object()
+
+
+@dataclasses.dataclass
+class _PlanRequest:
+    mat: CSRMatrix
+    key: str
+    future: "Future[ExecutionPlan]"
+    t_submit: float
+
+
+class PlanDispatcher:
+    """Request queue → deadline micro-batches → staged cold path.
+
+    See the module docstring for the pipeline shape. Thread-safe: any
+    number of front-end threads (in-process callers, RPC connection
+    handlers) may ``submit`` concurrently.
+    """
+
+    def __init__(self, builder: PlanBuilder, *, batch_size: int = 16,
+                 max_wait_ms: float = 5.0, build_workers: int = 2,
+                 latency_window: int = 100_000):
+        assert builder.selector is not None, "cold path needs a selector"
+        self.builder = builder
+        self.cache = builder.cache
+        self.batch_size = batch_size
+        self.max_wait = max_wait_ms / 1e3
+        self.requests = 0
+        self._queue: "queue.Queue" = queue.Queue()
+        self._build_queue: "queue.Queue" = queue.Queue()
+        self._lat_lock = threading.Lock()
+        # bounded: a long-running server keeps a sliding window, not every
+        # latency ever observed (percentiles stay O(window))
+        self._latencies: "collections.deque[float]" = collections.deque(
+            maxlen=latency_window)
+        self._warm = 0
+        # keys whose plan build is in flight → requests waiting on it, so a
+        # later micro-batch joins the pending build instead of duplicating
+        # the selection + build work (guarded by _inflight_lock; builders
+        # cache.put *before* popping, so a racer either finds the in-flight
+        # entry or peeks the finished plan — never neither)
+        self._inflight_lock = threading.Lock()
+        self._inflight: Dict[str, List[_PlanRequest]] = {}
+        # serializes enqueue-vs-shutdown so no request can land behind the
+        # sentinel with a forever-pending future
+        self._close_lock = threading.Lock()
+        self._closed = False
+        self._batcher = threading.Thread(target=self._batch_loop,
+                                         name="plan-batcher", daemon=True)
+        self._builders = [threading.Thread(target=self._build_loop,
+                                           name=f"plan-builder-{i}",
+                                           daemon=True)
+                          for i in range(max(1, build_workers))]
+        self._batcher.start()
+        for t in self._builders:
+            t.start()
+
+    # -- client surface ------------------------------------------------------
+    def submit(self, mat: CSRMatrix) -> "Future[ExecutionPlan]":
+        with self._lat_lock:
+            self.requests += 1
+        t0 = time.perf_counter()
+        key = matrix_fingerprint(mat)
+        fut: "Future[ExecutionPlan]" = Future()
+        plan = self.cache.get(key)
+        if plan is not None:
+            self._record(t0)
+            with self._lat_lock:
+                self._warm += 1
+            fut.set_result(plan)
+            return fut
+        with self._close_lock:
+            if self._closed:
+                raise RuntimeError("server closed")
+            self._queue.put(_PlanRequest(mat, key, fut, t0))
+        return fut
+
+    def handle(self, mats: Sequence[CSRMatrix],
+               timeout: float = 120.0) -> List[ExecutionPlan]:
+        futs = [self.submit(m) for m in mats]
+        return [f.result(timeout=timeout) for f in futs]
+
+    def close(self, timeout: float = 30.0) -> None:
+        with self._close_lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._queue.put(_SENTINEL)
+        self._batcher.join(timeout)
+        for t in self._builders:
+            t.join(timeout)
+
+    def reset_stats(self) -> None:
+        """Zero the serving metrics (latency window, warm/request counts,
+        builder + cache counters) — e.g. after an untimed jit warm-up, so
+        the reported numbers reflect steady-state serving only."""
+        with self._lat_lock:
+            self._latencies.clear()
+            self._warm = 0
+            self.requests = 0
+        self.builder.reset_stats()  # resets the cache counters too
+
+    def stats(self) -> dict:
+        s = self.builder.stats()
+        with self._lat_lock:
+            lats = list(self._latencies)
+            warm = self._warm
+            requests = self.requests
+        s.update(requests=requests, warm_hits=warm)
+        if lats:
+            import numpy as np
+
+            arr = np.asarray(lats)
+            s.update(p50_ms=float(np.percentile(arr, 50) * 1e3),
+                     p99_ms=float(np.percentile(arr, 99) * 1e3),
+                     mean_ms=float(arr.mean() * 1e3))
+        return s
+
+    def _record(self, t_submit: float) -> None:
+        with self._lat_lock:
+            self._latencies.append(time.perf_counter() - t_submit)
+
+    # -- stage 1: micro-batcher (feature-batch + device inference) -----------
+    def _batch_loop(self) -> None:
+        stop = False
+        while not stop:
+            item = self._queue.get()
+            if item is _SENTINEL:
+                break
+            batch: List[_PlanRequest] = [item]
+            deadline = time.perf_counter() + self.max_wait
+            while len(batch) < self.batch_size:
+                remain = deadline - time.perf_counter()
+                if remain <= 0:
+                    break
+                try:
+                    nxt = self._queue.get(timeout=remain)
+                except queue.Empty:
+                    break
+                if nxt is _SENTINEL:
+                    stop = True
+                    break
+                batch.append(nxt)
+            self._dispatch(batch)
+        self._build_queue.put(_SENTINEL)
+
+    def _dispatch(self, batch: List[_PlanRequest]) -> None:
+        groups: Dict[str, List[_PlanRequest]] = {}
+        for r in batch:
+            groups.setdefault(r.key, []).append(r)
+        todo: List[str] = []
+        for key, reqs in groups.items():
+            with self._inflight_lock:
+                pending = self._inflight.get(key)
+                if pending is not None:
+                    pending.extend(reqs)  # join the build already in flight
+                    continue
+                plan = self.cache.peek(key)  # a sibling may have built it
+                if plan is None:
+                    self._inflight[key] = reqs
+                    todo.append(key)
+            if plan is not None:
+                for r in reqs:
+                    self._record(r.t_submit)
+                    r.future.set_result(plan)
+        if not todo:
+            return
+        try:
+            names = self.builder.select_names(
+                [self._inflight[key][0].mat for key in todo])
+        except Exception as exc:  # selector failure fails the whole batch
+            for key in todo:
+                with self._inflight_lock:
+                    reqs = self._inflight.pop(key, [])
+                for r in reqs:
+                    r.future.set_exception(exc)
+            return
+        for key, name in zip(todo, names):
+            self._build_queue.put((key, name))
+
+    # -- stage 2: plan build (reorder + symbolic) ----------------------------
+    def _build_loop(self) -> None:
+        while True:
+            item = self._build_queue.get()
+            if item is _SENTINEL:
+                self._build_queue.put(_SENTINEL)  # release sibling workers
+                return
+            key, name = item
+            mat = self._inflight[key][0].mat  # entry exists until we pop it
+            try:
+                plan = self.builder.build(mat, algorithm=name,
+                                          fingerprint=key)
+            except Exception as exc:
+                with self._inflight_lock:
+                    reqs = self._inflight.pop(key, [])
+                for r in reqs:
+                    r.future.set_exception(exc)
+                continue
+            try:
+                self.cache.put(key, plan)  # put, *then* pop (see _inflight)
+            except Exception:
+                # a disk-tier write failure must not fail the waiters: the
+                # build succeeded and the memory tier is already populated
+                pass
+            with self._inflight_lock:
+                reqs = self._inflight.pop(key, [])
+            for r in reqs:
+                self._record(r.t_submit)
+                r.future.set_result(plan)

@@ -165,10 +165,54 @@ def pad_csr_batch(mats: Sequence[CSRMatrix], n_max: Optional[int] = None,
 _BATCH_JIT_CACHE: dict = {}
 
 
+def _build_sharded_featurizer(sm, use_pallas: bool,
+                              interpret: Optional[bool]):
+    """jit(shard_map(featurize)) over the serving mesh's batch axis.
+
+    Each shard runs the full segment-reduction featurizer (Pallas inner
+    loops included) on its B/ndev slice of the padded batch — the features
+    of one matrix never depend on another, so the split is exact, not an
+    approximation. Ragged batches are padded up to a multiple of the device
+    count by replicating row 0 (filler results are sliced off), which keeps
+    every shard the same static shape. A 1-device mesh runs this very same
+    code as its degenerate case.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.distributed.compat import shard_map
+
+    nd = sm.num_devices
+    spec = sm.spec()
+
+    def local(indptr, indices, n, nnz):
+        return _extract_features_batch_impl(
+            CSRBatch(indptr, indices, n, nnz), use_pallas=use_pallas,
+            interpret=interpret)
+
+    mapped = shard_map(local, mesh=sm.mesh, in_specs=(spec,) * 4,
+                       out_specs=spec, check_vma=False)
+
+    @jax.jit
+    def run(indptr, indices, n, nnz):
+        b = indptr.shape[0]
+        pad = (-b) % nd
+        if pad:
+            indptr = jnp.concatenate([indptr,
+                                      jnp.repeat(indptr[:1], pad, axis=0)])
+            indices = jnp.concatenate([indices,
+                                       jnp.repeat(indices[:1], pad, axis=0)])
+            n = jnp.concatenate([n, jnp.repeat(n[:1], pad)])
+            nnz = jnp.concatenate([nnz, jnp.repeat(nnz[:1], pad)])
+        return mapped(indptr, indices, n, nnz)[:b]
+
+    return run
+
+
 def extract_features_batch_jnp(batch: CSRBatch, *, use_pallas: bool = False,
                                interpret: Optional[bool] = None,
-                               jit: bool = True):
-    """All 12 Table-3 features for a padded CSR batch, on device.
+                               jit: bool = True, mesh=None):
+    """All 12 Table-3 features for a padded CSR batch, on device(s).
 
     Pure segment reductions over ``(indptr, indices)`` — per-entry row ids by
     binary search on indptr, degrees of the symmetrized graph by
@@ -176,27 +220,33 @@ def extract_features_batch_jnp(batch: CSRBatch, *, use_pallas: bool = False,
     segments), bandwidth/profile/row-stats as flat masked reductions. Memory
     is O(B·(N+E)); no dense (n, n) array exists at any point.
 
+    The batch axis is sharded over the active serving mesh
+    (:func:`repro.distributed.meshctx.get_serving_mesh`, or ``mesh=`` to
+    override) with shard_map: each device featurizes its slice of the batch
+    independently, so throughput scales with the mesh and the result is
+    element-wise identical to the 1-device run. There is no separate
+    single-device code path — that is just the degenerate 1-device mesh.
+
     ``use_pallas=True`` routes the three entry reductions and three row
-    reductions through `repro.kernels.csr_stats` (interpret mode on CPU).
-    The whole extraction compiles as one jit per padded shape (pair with
-    ``pad_csr_batch(..., bucket=True)`` to bound the number of buckets).
-    Returns a (B, 12) float32 jax array ordered like FEATURE_NAMES.
+    reductions through `repro.kernels.csr_stats` *per shard* (interpret
+    mode on CPU). The whole extraction compiles as one jit per padded shape
+    (pair with ``pad_csr_batch(..., bucket=True)`` to bound the number of
+    buckets). ``jit=False`` runs the raw unsharded impl — it exists for
+    composing into an outer trace, not for serving. Returns a (B, 12)
+    float32 jax array ordered like FEATURE_NAMES.
     """
     if not jit:
         return _extract_features_batch_impl(batch, use_pallas=use_pallas,
                                             interpret=interpret)
-    import functools
+    from repro.distributed.meshctx import get_serving_mesh
 
-    import jax
-
-    key = (use_pallas, interpret)
+    sm = mesh if mesh is not None else get_serving_mesh()
+    key = (use_pallas, interpret, sm)
     fn = _BATCH_JIT_CACHE.get(key)
     if fn is None:
-        fn = jax.jit(functools.partial(_extract_features_batch_impl,
-                                       use_pallas=use_pallas,
-                                       interpret=interpret))
+        fn = _build_sharded_featurizer(sm, use_pallas, interpret)
         _BATCH_JIT_CACHE[key] = fn
-    return fn(CSRBatch(*(np.asarray(a) for a in batch)))
+    return fn(*(np.asarray(a) for a in batch))
 
 
 def _extract_features_batch_impl(batch: CSRBatch, *, use_pallas: bool,

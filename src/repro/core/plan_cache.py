@@ -30,6 +30,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.core.locking import FileLock
 from repro.sparse.csr import CSRMatrix
 
 __all__ = ["matrix_fingerprint", "PlanCache", "TwoTierPlanCache",
@@ -156,6 +157,15 @@ class TwoTierPlanCache(PlanCache):
     never observed half-written by a concurrent reader or a crashed
     process. Disk entries outlive LRU eviction *and* the process — that is
     the tier's entire point.
+
+    The tier is **replica-shared**: any number of serving processes may
+    point at one ``cache_dir`` and warm each other. Reads and atomic
+    writes need no coordination; maintenance (budget-eviction sweeps,
+    ``stats()``/usage scans, ``clear_disk``) is coordinated through
+    sidecar cross-process :class:`repro.core.locking.FileLock`\\ s so two
+    replicas can never run the eviction sweep concurrently (which would
+    over-evict past the budget and miscount) and a scan never observes a
+    sweep half-applied.
     """
 
     def __init__(self, capacity: int = 4096,
@@ -182,6 +192,22 @@ class TwoTierPlanCache(PlanCache):
         self.disk_evictions = 0
         # one sweeper at a time; concurrent writers skip instead of queueing
         self._evict_lock = threading.Lock()
+        # cross-process coordination: N replicas share one disk tier, with
+        # two sidecar flocks splitting the two concerns. `.sweep.lock`
+        # (always tried non-blocking) makes the eviction sweep single-
+        # flight across replicas — the loser *skips*, exactly like the
+        # in-process _evict_lock. `.scan.lock` makes usage scans
+        # consistent: stats take it shared, the sweep's delete pass takes
+        # it exclusive with a bounded timed wait (the put path must never
+        # stall indefinitely), so a scan never observes a half-applied
+        # sweep. Two files, not one, because a
+        # single lock cannot both let sweeps skip past a *sweeping*
+        # sibling and wait behind a *scanning* one: with one lock, a
+        # steady trickle of stats polls (shared holders) would starve
+        # eviction forever. Plan-file reads and atomic writes take
+        # neither — the hot path stays lock-free.
+        self._sweep_lock = FileLock(os.path.join(cache_dir, ".sweep.lock"))
+        self._scan_lock = FileLock(os.path.join(cache_dir, ".scan.lock"))
 
     def _path(self, key: str) -> str:
         return os.path.join(self.cache_dir, f"{key}.{self.version}.plan.pkl")
@@ -232,57 +258,92 @@ class TwoTierPlanCache(PlanCache):
         (mtime order, every version) until within bytes *and* entries.
 
         Runs outside the memory-tier lock (it is pure disk maintenance);
-        ``_evict_lock`` keeps it single-flight — a writer that finds a sweep
-        already running skips rather than queueing. That makes the budget a
+        ``_evict_lock`` keeps it single-flight within the process and the
+        tier's cross-process flock keeps it single-flight *across serving
+        replicas* — both taken non-blocking, so a writer that finds a sweep
+        already running (here or in a sibling replica) skips rather than
+        queueing. Without the flock, two replicas each compute the same
+        overage from their own listing and together delete ~2× past the
+        budget while miscounting their evictions. That makes the budget a
         *soft* bound under concurrency (a file written after the running
         sweep's listdir survives until the next write triggers a sweep),
         which is the right trade for a cache: bounded drift, no writer ever
-        blocked on another's sweep. A file another process removed
-        mid-sweep is simply skipped.
+        blocked on another's sweep. A file that vanished before our unlink
+        (a sibling's ``clear_disk``) is already off disk, so it leaves the
+        running totals but is not counted as *our* eviction.
         """
         if self.max_disk_bytes is None and self.max_disk_entries is None:
             return
         if not self._evict_lock.acquire(blocking=False):
             return
         try:
-            entries = []
-            for f in os.listdir(self.cache_dir):
-                if not f.endswith(".plan.pkl"):
-                    continue
+            if not self._sweep_lock.acquire(blocking=False):
+                return  # a sibling replica is sweeping this tier
+            try:
+                # wait out in-flight stats scans with a BOUNDED wait, not
+                # an unbounded blocking flock: this runs on the put path
+                # (a plan-build worker serving live requests), and flock
+                # gives LOCK_EX no priority over a stream of LOCK_SH
+                # holders — unbounded waiting could stall the writer
+                # indefinitely behind replicas polling stats(). The
+                # timeout path *queues* on the in-process mutex (so local
+                # scan hammering can't starve it) and polls the flock for
+                # the remainder; if the budget expires anyway, skip — the
+                # next put retries the sweep.
+                if not self._scan_lock.acquire(timeout=0.25):
+                    return
                 try:
-                    st = os.stat(os.path.join(self.cache_dir, f))
-                except OSError:
-                    continue
-                entries.append((st.st_mtime, st.st_size, f))
-            entries.sort()  # oldest first
-            total = sum(e[1] for e in entries)
-            count = len(entries)
-            evicted = 0
-            for mtime, size, f in entries:
-                over_bytes = (self.max_disk_bytes is not None
-                              and total > self.max_disk_bytes)
-                over_count = (self.max_disk_entries is not None
-                              and count > self.max_disk_entries)
-                if not over_bytes and not over_count:
-                    break
-                try:
-                    os.unlink(os.path.join(self.cache_dir, f))
-                except OSError:
-                    continue
-                total -= size
-                count -= 1
-                evicted += 1
-            if evicted:
-                with self._lock:
-                    self.disk_evictions += evicted
+                    self._evict_disk_locked()
+                finally:
+                    self._scan_lock.release()
+            finally:
+                self._sweep_lock.release()
         finally:
             self._evict_lock.release()
+
+    def _evict_disk_locked(self) -> None:
+        entries = []
+        for f in os.listdir(self.cache_dir):
+            if not f.endswith(".plan.pkl"):
+                continue
+            try:
+                st = os.stat(os.path.join(self.cache_dir, f))
+            except OSError:
+                continue
+            entries.append((st.st_mtime, st.st_size, f))
+        entries.sort()  # oldest first
+        total = sum(e[1] for e in entries)
+        count = len(entries)
+        evicted = 0
+        for mtime, size, f in entries:
+            over_bytes = (self.max_disk_bytes is not None
+                          and total > self.max_disk_bytes)
+            over_count = (self.max_disk_entries is not None
+                          and count > self.max_disk_entries)
+            if not over_bytes and not over_count:
+                break
+            try:
+                os.unlink(os.path.join(self.cache_dir, f))
+            except FileNotFoundError:
+                pass  # already gone: off the budget, but not our eviction
+            except OSError:
+                continue  # undeletable: keep it charged against the budget
+            else:
+                evicted += 1
+            total -= size
+            count -= 1
+        if evicted:
+            with self._lock:
+                self.disk_evictions += evicted
 
     def _suffix(self) -> str:
         return f".{self.version}.plan.pkl"
 
-    # disk-only maintenance: no memory-tier state involved, so no lock —
-    # holding it across a listdir/unlink sweep would stall warm-path gets
+    # disk-only maintenance: no memory-tier lock involved — holding it
+    # across a listdir/unlink sweep would stall warm-path gets. The scan
+    # takes the tier's *shared* flock instead: concurrent with other
+    # replicas' scans, excluded by a sweep, so stats never observe a
+    # half-applied eviction pass.
     def _disk_usage(self) -> "Tuple[int, int]":
         """One scandir pass → (entries of *this* version, bytes of *all*
         versions). Entries are what this cache can hit; bytes are what the
@@ -290,7 +351,7 @@ class TwoTierPlanCache(PlanCache):
         entries = 0
         total = 0
         suffix = self._suffix()
-        with os.scandir(self.cache_dir) as it:
+        with self._scan_lock.shared(), os.scandir(self.cache_dir) as it:
             for e in it:
                 if not e.name.endswith(".plan.pkl"):
                     continue
@@ -311,9 +372,13 @@ class TwoTierPlanCache(PlanCache):
         return self._disk_usage()[1]
 
     def clear_disk(self) -> None:
-        for f in os.listdir(self.cache_dir):
-            if f.endswith(self._suffix()):
-                os.unlink(os.path.join(self.cache_dir, f))
+        with self._scan_lock.exclusive():
+            for f in os.listdir(self.cache_dir):
+                if f.endswith(self._suffix()):
+                    try:
+                        os.unlink(os.path.join(self.cache_dir, f))
+                    except FileNotFoundError:
+                        pass  # a sibling replica got there first
 
     def reset_stats(self) -> None:
         with self._lock:

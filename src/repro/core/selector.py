@@ -150,26 +150,51 @@ class ReorderSelector:
         """Label indices for an on-device (B, 12) feature batch.
 
         Zoo members exposing ``forward_jnp`` stay on device — scaler +
-        forward + argmax in one cached jit (rebuilt if the model or scaler
-        is refit). That now includes decision trees and random forests via
-        the flattened-node traversal of :mod:`repro.core.ml.forest_jnp`,
-        so the paper's winning model serves without a host round-trip;
-        only KNN/NB fall back to host inference on transferred features.
+        forward + argmax shard_mapped over the active serving mesh's batch
+        axis in one cached jit (rebuilt if the model, scaler, or mesh
+        changes). The fitted state closes over the shard_map body as
+        replicated constants, so every shard classifies its B/ndev slice
+        locally and the padded feature batch never gathers onto one device;
+        a 1-device mesh is the degenerate case of the same trace. That
+        includes decision trees and random forests via the flattened-node
+        traversal of :mod:`repro.core.ml.forest_jnp`, so the paper's
+        winning model serves without a host round-trip; only KNN/NB fall
+        back to host inference on transferred features.
         """
         if hasattr(self.model, "forward_jnp"):
+            from repro.distributed.meshctx import get_serving_mesh
+
+            sm = get_serving_mesh()
             version = self._fit_version()
             fn = getattr(self, "_device_fn", None)
-            if fn is None or not self._same_version(
-                    getattr(self, "_device_fn_version", None), version):
+            if (fn is None or getattr(self, "_device_fn_mesh", None) != sm
+                    or not self._same_version(
+                        getattr(self, "_device_fn_version", None), version)):
                 import jax
                 import jax.numpy as jnp
+
+                from repro.distributed.compat import shard_map
 
                 def infer(x):
                     z = scaler_transform_jnp(self.scaler, x)
                     return jnp.argmax(self.model.forward_jnp(z), axis=1)
 
-                fn = self._device_fn = jax.jit(infer)
+                spec = sm.spec()
+                mapped = shard_map(infer, mesh=sm.mesh, in_specs=(spec,),
+                                   out_specs=spec, check_vma=False)
+                nd = sm.num_devices
+
+                def infer_sharded(x):
+                    b = x.shape[0]
+                    pad = (-b) % nd
+                    if pad:  # ragged batch: filler rows, sliced off below
+                        x = jnp.concatenate(
+                            [x, jnp.repeat(x[:1], pad, axis=0)])
+                    return mapped(x)[:b]
+
+                fn = self._device_fn = jax.jit(infer_sharded)
                 self._device_fn_version = version
+                self._device_fn_mesh = sm
             return np.asarray(fn(feats))
         return self.model.predict(self.scaler.transform(np.asarray(feats)))
 
@@ -252,6 +277,17 @@ def train_selector(
     pred = sel.predict_features(xte)
     acc = accuracy_score(yte, pred)
 
+    # training-report card (persisted into SelectorBundle schema v2):
+    # confusion matrix over the held-out split + per-algorithm recall
+    k = len(ds.algorithms)
+    confusion = np.zeros((k, k), dtype=np.int64)
+    for t, q in zip(yte, pred):
+        confusion[int(t), int(q)] += 1
+    support = confusion.sum(axis=1)
+    per_algorithm_recall = {
+        alg: (float(confusion[i, i] / support[i]) if support[i] else None)
+        for i, alg in enumerate(ds.algorithms)}
+
     amd_idx = ds.algorithms.index("amd")
     t_amd = ds.times[ite, amd_idx].sum()
     t_pred = ds.times[ite, pred].sum()
@@ -262,6 +298,9 @@ def train_selector(
         model=model_name, scaling=scaling,
         best_params=gs.best_params_, cv_score=gs.best_score_,
         test_accuracy=acc,
+        confusion=confusion,
+        per_algorithm_recall=per_algorithm_recall,
+        test_support={alg: int(s) for alg, s in zip(ds.algorithms, support)},
         test_idx=ite, train_idx=itr, predictions=pred,
         time_amd=float(t_amd), time_predicted=float(t_pred),
         time_ideal=float(t_ideal),

@@ -1,10 +1,21 @@
-"""Mesh context threaded through model code.
+"""Mesh contexts threaded through model and serving code.
 
-Model forward functions are mesh-agnostic except for the MoE layer, whose
-dropless sort+ragged_dot dispatch must stay *local* to each data shard
-(a global argsort under GSPMD all-gathers the token buffer). The launcher
-sets the active context; when no mesh is set (unit tests, single CPU), the
-MoE layer runs its local path directly with unsharded weights.
+Two independent contexts live here:
+
+* :class:`MeshContext` — the *training* mesh (data/model axes) threaded
+  through model code. Model forward functions are mesh-agnostic except for
+  the MoE layer, whose dropless sort+ragged_dot dispatch must stay *local*
+  to each data shard (a global argsort under GSPMD all-gathers the token
+  buffer). The launcher sets the active context; when no mesh is set (unit
+  tests, single CPU), the MoE layer runs its local path directly with
+  unsharded weights.
+* :class:`ServingMesh` — the *selection-serving* mesh: a 1-D device mesh
+  over the request-batch axis. The padded-CSR featurizer
+  (`repro.core.features.extract_features_batch_jnp`) and the selector's
+  device inference shard_map over it, so featurize→infer scales out with
+  hardware. There is no unsharded code path: when nothing is configured,
+  the serving plane runs on the *degenerate 1-device mesh* (same trace
+  structure, one shard).
 """
 from __future__ import annotations
 
@@ -12,9 +23,11 @@ import dataclasses
 from typing import Optional, Tuple
 
 import jax
+import numpy as np
 
 __all__ = ["MeshContext", "set_mesh_context", "get_mesh_context",
-           "mesh_context"]
+           "mesh_context", "ServingMesh", "make_serving_mesh",
+           "set_serving_mesh", "get_serving_mesh", "serving_mesh"]
 
 
 @dataclasses.dataclass
@@ -64,4 +77,95 @@ class mesh_context:
 
     def __exit__(self, *exc):
         set_mesh_context(self.prev)
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Serving mesh — the distributed selection-serving plane's device layout
+# ---------------------------------------------------------------------------
+
+SERVING_BATCH_AXIS = "batch"
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingMesh:
+    """1-D mesh over the request-batch axis of the serving plane.
+
+    ``num_devices`` is the shard count the featurize→infer shard_map splits
+    a padded batch into; callers pad B up to a multiple of it (the sharded
+    wrappers do this internally, so ragged batches just work). Hashable —
+    it keys the jit caches of the sharded featurizer and inferencer.
+    """
+
+    mesh: jax.sharding.Mesh
+    axis: str = SERVING_BATCH_AXIS
+
+    @property
+    def num_devices(self) -> int:
+        return int(np.prod(self.mesh.devices.shape))
+
+    def spec(self) -> "jax.sharding.PartitionSpec":
+        from jax.sharding import PartitionSpec as P
+
+        return P(self.axis)
+
+
+def make_serving_mesh(num_devices: Optional[int] = None) -> ServingMesh:
+    """Serving mesh over the first ``num_devices`` devices (default: all).
+
+    ``num_devices=1`` is the degenerate single-device mesh — the same code
+    path the multi-device plane runs, with one shard.
+    """
+    devs = jax.devices()
+    if num_devices is not None:
+        if not 1 <= num_devices <= len(devs):
+            raise ValueError(
+                f"serving mesh wants {num_devices} devices but the platform "
+                f"has {len(devs)}")
+        devs = devs[:num_devices]
+    return ServingMesh(jax.sharding.Mesh(np.array(devs),
+                                         (SERVING_BATCH_AXIS,)))
+
+
+_SERVING: Optional[ServingMesh] = None
+_DEFAULT: Optional[ServingMesh] = None
+
+
+def set_serving_mesh(sm: Optional[ServingMesh]) -> None:
+    """Install the process-wide serving mesh (None → back to degenerate)."""
+    global _SERVING
+    _SERVING = sm
+
+
+def get_serving_mesh() -> ServingMesh:
+    """The active serving mesh, defaulting to the degenerate 1-device mesh.
+
+    The default is built lazily (importing this module must not touch jax
+    device state — and processes faking device counts via XLA_FLAGS fix
+    them before any jax use, so caching after first use is safe) and then
+    cached: this sits on the per-micro-batch serving hot path, where a
+    fresh ``jax.devices()`` + Mesh construction per call would be pure
+    overhead.
+    """
+    if _SERVING is not None:
+        return _SERVING
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = make_serving_mesh(1)
+    return _DEFAULT
+
+
+class serving_mesh:
+    """with serving_mesh(make_serving_mesh(4)): ... (or a ServingMesh)."""
+
+    def __init__(self, sm: ServingMesh):
+        self.sm = sm
+
+    def __enter__(self):
+        self.prev = _SERVING
+        set_serving_mesh(self.sm)
+        return self.sm
+
+    def __exit__(self, *exc):
+        set_serving_mesh(self.prev)
         return False

@@ -15,6 +15,15 @@ registries, that the stored feature names match the registered feature
 set's schema, and that the stored fingerprint matches the recomputed one
 (corruption check). Legacy ``ReorderSelector.save`` pickles still load,
 behind a :class:`DeprecationWarning` shim.
+
+**Schema v2** adds two *descriptive* sections — ``report_card`` (held-out
+test accuracy, per-algorithm recall, confusion matrix) and ``provenance``
+(what dataset the selector was trained on) — so a bundle answers "how good
+is this selector and where did it come from" without the training run.
+Both are deliberately excluded from the fingerprint: they describe the
+fitted behaviour, they don't change it, so a v1 bundle re-saved with a
+card keeps its cache version. v1 bundles (no such sections) still load,
+with both set to ``None``.
 """
 from __future__ import annotations
 
@@ -32,7 +41,7 @@ from .registry import (FEATURE_SET_REGISTRY, MODEL_REGISTRY, SCALER_REGISTRY,
 __all__ = ["SelectorBundle", "BundleValidationError",
            "BUNDLE_SCHEMA_VERSION"]
 
-BUNDLE_SCHEMA_VERSION = 1
+BUNDLE_SCHEMA_VERSION = 2
 
 _MAGIC = "repro.engine.SelectorBundle"
 
@@ -68,6 +77,15 @@ class SelectorBundle:
     schema_version: int = BUNDLE_SCHEMA_VERSION
     created_unix: float = 0.0
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # -- schema v2: descriptive sections (fingerprint-exempt) ---------------
+    # training-report card: {test_accuracy, cv_score, best_params,
+    # per_algorithm_recall: {alg: recall}, confusion: [[...]] (rows =
+    # true algorithm, cols = predicted, over the held-out split),
+    # test_support: {alg: count}}. None on v1 bundles and untrained saves.
+    report_card: Optional[Dict[str, Any]] = None
+    # dataset provenance: {n_samples, algorithms, feature_set, groups,
+    # dim_range, nnz_range, label_counts}. None on v1 bundles.
+    provenance: Optional[Dict[str, Any]] = None
 
     # -- identity ------------------------------------------------------------
     def compute_fingerprint(self) -> str:
@@ -88,9 +106,16 @@ class SelectorBundle:
 
     # -- conversion ----------------------------------------------------------
     @classmethod
-    def from_selector(cls, selector, meta: Optional[Dict[str, Any]] = None
+    def from_selector(cls, selector, meta: Optional[Dict[str, Any]] = None,
+                      report_card: Optional[Dict[str, Any]] = None,
+                      provenance: Optional[Dict[str, Any]] = None
                       ) -> "SelectorBundle":
-        """Snapshot a fitted :class:`repro.core.selector.ReorderSelector`."""
+        """Snapshot a fitted :class:`repro.core.selector.ReorderSelector`.
+
+        ``report_card``/``provenance`` are the v2 descriptive sections
+        (``SolverEngine.save`` fills them from its last training run);
+        omitted, the bundle is still a valid v2 envelope with both None.
+        """
         _ensure_default_registrations()
         fs_name = getattr(selector, "feature_set", "paper12")
         fs = get_feature_set(fs_name)
@@ -105,6 +130,8 @@ class SelectorBundle:
             algorithms=list(selector.algorithms),
             created_unix=time.time(),
             meta=dict(meta or {}),
+            report_card=report_card,
+            provenance=provenance,
         )
         b.fingerprint = b.compute_fingerprint()
         return b
@@ -145,6 +172,14 @@ class SelectorBundle:
             raise BundleValidationError(
                 "bundle fingerprint mismatch — the payload was modified "
                 "after save (or the file is corrupt)")
+        if self.report_card is not None:
+            conf = self.report_card.get("confusion")
+            k = len(self.algorithms)
+            if conf is not None and (len(conf) != k
+                                     or any(len(row) != k for row in conf)):
+                raise BundleValidationError(
+                    f"report card confusion matrix is not {k}x{k} for "
+                    f"algorithms {list(self.algorithms)}")
         return self
 
     # -- persistence ---------------------------------------------------------

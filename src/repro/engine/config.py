@@ -38,10 +38,20 @@ class EngineConfig:
     path: str = "device"          # "device" (padded CSR batch) or "host"
     use_pallas: bool = False
     batch_size: int = 16
+    # serving-mesh width: the featurize→infer shard_map splits each device
+    # micro-batch over this many devices (None: leave the process-wide
+    # serving mesh alone — degenerate 1-device mesh unless a launcher set
+    # one). Installing it is process-global (see SolverEngine).
+    serving_devices: Optional[int] = None
 
     # async serving
     max_wait_ms: float = 5.0
     build_workers: int = 2
+
+    # RPC front-end (SolverEngine.serve(rpc=True)): bind address. Port 0
+    # binds an ephemeral port, published on the returned server object.
+    rpc_host: str = "127.0.0.1"
+    rpc_port: int = 0
 
     # numeric solve
     solver: str = "multifrontal"  # or "simplicial"

@@ -26,6 +26,22 @@ class EngineError(RuntimeError):
     """Engine misuse: untrained access, config/selector mismatch, etc."""
 
 
+def _dataset_provenance(ds) -> Dict[str, Any]:
+    """Plain-data description of a LabeledDataset for bundle schema v2."""
+    labels = np.asarray(ds.labels)
+    return dict(
+        kind=type(ds).__name__,
+        n_samples=int(np.asarray(ds.features).shape[0]),
+        algorithms=list(ds.algorithms),
+        feature_set=getattr(ds, "feature_set", "paper12"),
+        groups=sorted(set(getattr(ds, "groups", []))),
+        dim_range=[int(np.min(ds.dims)), int(np.max(ds.dims))],
+        nnz_range=[int(np.min(ds.nnzs)), int(np.max(ds.nnzs))],
+        label_counts={alg: int((labels == i).sum())
+                      for i, alg in enumerate(ds.algorithms)},
+    )
+
+
 class SolverEngine:
     """One API for train → select → plan → solve → serve → save/load.
 
@@ -46,6 +62,9 @@ class SolverEngine:
         self._fingerprint: Optional[str] = None
         self._builder = None
         self.last_report: Optional[Dict[str, Any]] = None
+        # dataset provenance of the last train() — persisted into bundle
+        # schema v2 by save() (None for attach()/load()-built engines)
+        self.last_provenance: Optional[Dict[str, Any]] = None
         if selector is not None:
             self.attach(selector)
 
@@ -94,6 +113,7 @@ class SolverEngine:
         kwargs.update(overrides)
         self._selector, report = train_selector(dataset, **kwargs)
         self.last_report = report
+        self.last_provenance = _dataset_provenance(dataset)
         self.refresh_fingerprint()
         return report
 
@@ -153,7 +173,9 @@ class SolverEngine:
         return self.selector.select(a)
 
     def select_batch(self, mats: Sequence) -> List[str]:
-        """Algorithm names for a batch via the configured path."""
+        """Algorithm names for a batch via the configured path (sharded
+        over the configured serving mesh on the device path)."""
+        self._ensure_serving_mesh()
         names, _ = self.selector.select_batch(
             mats, path=self.config.path, use_pallas=self.config.use_pallas)
         return names
@@ -161,11 +183,13 @@ class SolverEngine:
     # -- planning ------------------------------------------------------------
     def plan(self, a):
         """Cached :class:`ExecutionPlan` for one matrix."""
+        self._ensure_serving_mesh()
         plan, _ = self._get_builder().get_or_build(a)
         return plan
 
     def plan_batch(self, mats: Sequence) -> List:
         """Plans for a request batch (hits skip every cold stage)."""
+        self._ensure_serving_mesh()
         return self._get_builder().plan_batch(mats)
 
     # -- solving -------------------------------------------------------------
@@ -190,29 +214,86 @@ class SolverEngine:
                 for a, p, b in zip(mats, plans, bs)]
 
     # -- serving -------------------------------------------------------------
-    def serve(self, **overrides):
-        """A fresh :class:`AsyncPlanServer` bound to this engine's builder
-        (and therefore to its fingerprint-versioned cache). Keyword
-        overrides pass through (``batch_size``, ``max_wait_ms``,
-        ``build_workers``)."""
+    def _ensure_serving_mesh(self) -> None:
+        """Install the configured serving mesh (``serving_devices``) if it
+        is not already active. Process-global by design — the serving mesh
+        is device topology, not per-engine state — and a no-op when the
+        config leaves ``serving_devices`` unset (the degenerate 1-device
+        mesh, or whatever the launcher installed, stays active)."""
+        nd = self.config.serving_devices
+        if nd is None:
+            return
+        from repro.distributed.meshctx import (get_serving_mesh,
+                                               make_serving_mesh,
+                                               set_serving_mesh)
+
+        if get_serving_mesh().num_devices != nd:
+            set_serving_mesh(make_serving_mesh(nd))
+
+    def serve(self, *, rpc: bool = False, host: Optional[str] = None,
+              port: Optional[int] = None, **overrides):
+        """A fresh server bound to this engine's builder (and therefore to
+        its fingerprint-versioned, replica-shareable cache).
+
+        ``rpc=False`` (default) returns the in-process
+        :class:`AsyncPlanServer`; ``rpc=True`` additionally binds the
+        length-prefixed socket front-end (:class:`repro.launch.rpc
+        .PlanRPCServer`) on ``(host, port)`` — defaulting to the config's
+        ``rpc_host``/``rpc_port`` — and returns it (its ``close()`` shuts
+        the pipeline down too; the bound port is ``server.port``). Keyword
+        overrides pass through to the pipeline (``batch_size``,
+        ``max_wait_ms``, ``build_workers``)."""
         from repro.launch.serve_selector import AsyncPlanServer
 
+        self._ensure_serving_mesh()
         cfg = self.config
         kwargs = dict(batch_size=cfg.batch_size,
                       max_wait_ms=cfg.max_wait_ms,
                       build_workers=cfg.build_workers)
         kwargs.update(overrides)
-        return AsyncPlanServer(self._get_builder(), **kwargs)
+        server = AsyncPlanServer(self._get_builder(), **kwargs)
+        if not rpc:
+            return server
+        from repro.launch.rpc import PlanRPCServer
+
+        try:
+            return PlanRPCServer(
+                server, host=cfg.rpc_host if host is None else host,
+                port=cfg.rpc_port if port is None else port,
+                own_dispatcher=True)
+        except BaseException:
+            # a failed bind (port in use, bad host) must not leak the
+            # already-running batcher/builder threads — e.g. a caller
+            # retrying ports in a loop would accumulate a pool per attempt
+            server.close()
+            raise
 
     # -- persistence ---------------------------------------------------------
     def save(self, path: str, meta: Optional[Dict[str, Any]] = None) -> str:
-        """Persist the fitted selector as a versioned SelectorBundle."""
+        """Persist the fitted selector as a versioned SelectorBundle.
+
+        When the engine trained the selector itself, the bundle carries the
+        schema-v2 training-report card (test accuracy, per-algorithm
+        recall, confusion matrix) and the dataset provenance — an
+        attach()/load()-built engine saves a bundle with both ``None``."""
         meta = dict(meta or {})
+        report_card = None
         if self.last_report is not None:
-            meta.setdefault("test_accuracy",
-                            self.last_report.get("test_accuracy"))
-        return SelectorBundle.from_selector(self.selector,
-                                            meta=meta).save(path)
+            rep = self.last_report
+            meta.setdefault("test_accuracy", rep.get("test_accuracy"))
+            conf = rep.get("confusion")
+            report_card = dict(
+                test_accuracy=rep.get("test_accuracy"),
+                cv_score=rep.get("cv_score"),
+                best_params=rep.get("best_params"),
+                per_algorithm_recall=rep.get("per_algorithm_recall"),
+                confusion=(np.asarray(conf).tolist()
+                           if conf is not None else None),
+                test_support=rep.get("test_support"),
+            )
+        return SelectorBundle.from_selector(
+            self.selector, meta=meta, report_card=report_card,
+            provenance=self.last_provenance).save(path)
 
     @classmethod
     def load(cls, path: str, config: Optional[EngineConfig] = None

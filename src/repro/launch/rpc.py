@@ -1,0 +1,456 @@
+"""RPC front-end for the plan-serving plane: length-prefixed socket protocol.
+
+    PYTHONPATH=src python -m repro.launch.rpc --port 7077   # serve
+    PYTHONPATH=src python -m repro.launch.rpc --smoke       # CI round trip
+
+The :class:`AsyncPlanServer` pipeline was in-process only — a plan request
+had to originate in the serving process itself. This module puts a real
+(stdlib-only) transport in front of the same dispatch core so separate
+processes — other hosts' solver jobs, load generators, sibling replicas —
+submit matrices over a socket and get :class:`ExecutionPlan`s back:
+
+    client                      server
+    ------                      ------
+    frame{op: plan, csr}  --->  PlanRPCServer (accept/conn threads)
+                                  └→ AsyncPlanServer.submit (micro-batching,
+                                     sharded featurize→infer, build pool,
+                                     replica-shared two-tier cache)
+    frame{ok, plan}       <---  future resolves
+
+**Framing.** Every message is a 4-byte big-endian length followed by a
+pickle payload — the classic length-prefixed protocol, trivially
+implementable from any language with a pickle bridge and robust under
+partial reads (``_recv_exact`` loops). Requests and responses are plain
+dicts; matrices travel as their CSR arrays, plans as pickled
+:class:`ExecutionPlan` objects.
+
+**Trust boundary.** Payloads are pickles, so the server must only listen
+where clients are trusted (localhost or a private service mesh) — the same
+trust model as the shared plan-cache directory, whose entries are also
+pickles. This is infrastructure RPC, not a public API gateway.
+
+Ops: ``ping`` (liveness + server identity), ``plan`` (one matrix → plan),
+``plan_batch`` (many), ``select`` (names only, no plan build), ``stats``,
+``shutdown`` (drain and stop the listener).
+"""
+from __future__ import annotations
+
+import argparse
+import pickle
+import socket
+import socketserver
+import struct
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.sparse.csr import CSRMatrix
+
+__all__ = ["PlanRPCServer", "PlanRPCClient", "RPCError", "main"]
+
+_LEN = struct.Struct(">I")
+MAX_FRAME = 1 << 30  # 1 GiB: rejects garbage/hostile length prefixes
+
+
+class RPCError(RuntimeError):
+    """Server-side failure surfaced to the client (message carried over)."""
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("peer closed mid-frame"
+                                  if buf else "peer closed")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def send_frame(sock: socket.socket, obj: Any) -> None:
+    payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    sock.sendall(_LEN.pack(len(payload)) + payload)
+
+
+def recv_frame(sock: socket.socket) -> Any:
+    (n,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
+    if n > MAX_FRAME:
+        raise RPCError(f"frame of {n} bytes exceeds MAX_FRAME")
+    return pickle.loads(_recv_exact(sock, n))
+
+
+# ---------------------------------------------------------------------------
+# CSR wire format — plain arrays, no class pickling on the request path
+# ---------------------------------------------------------------------------
+
+def matrix_to_wire(m: CSRMatrix) -> Dict[str, Any]:
+    return {"n": int(m.n),
+            "indptr": np.asarray(m.indptr, np.int32),
+            "indices": np.asarray(m.indices, np.int32),
+            "data": None if m.data is None else np.asarray(m.data),
+            "name": m.name}
+
+
+def matrix_from_wire(d: Dict[str, Any]) -> CSRMatrix:
+    n = int(d["n"])
+    return CSRMatrix(np.asarray(d["indptr"], np.int32),
+                     np.asarray(d["indices"], np.int32),
+                     None if d.get("data") is None else np.asarray(d["data"]),
+                     (n, n), name=str(d.get("name", "")))
+
+
+# ---------------------------------------------------------------------------
+# server
+# ---------------------------------------------------------------------------
+
+class PlanRPCServer:
+    """Socket front-end over an :class:`AsyncPlanServer`/dispatch core.
+
+    One accept loop, one handler thread per connection (requests on a
+    connection are answered in order; concurrency comes from concurrent
+    connections, which all feed the same micro-batching queue — exactly
+    the fan-in the deadline batcher exists for). ``port=0`` binds an
+    ephemeral port, published as ``self.port`` (the launcher prints it).
+
+    ``own_dispatcher=True`` (the default when constructed by
+    ``SolverEngine.serve(rpc=True)``) makes ``close()`` shut the dispatch
+    core down too; with ``False`` the caller keeps the core for further
+    in-process use.
+    """
+
+    def __init__(self, dispatcher, host: str = "127.0.0.1", port: int = 0,
+                 *, own_dispatcher: bool = True, backlog: int = 128):
+        self.dispatcher = dispatcher
+        self.own_dispatcher = own_dispatcher
+        self._sock = socket.create_server((host, port), backlog=backlog)
+        self.host, self.port = self._sock.getsockname()[:2]
+        self._closed = threading.Event()
+        self._conns_lock = threading.Lock()
+        self._conns: List[socket.socket] = []
+        self.started_unix = time.time()
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="rpc-accept", daemon=True)
+        self._accept_thread.start()
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self, timeout: float = 30.0) -> None:
+        if self._closed.is_set():
+            return
+        self._closed.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        with self._conns_lock:
+            conns = list(self._conns)
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:
+                pass
+        self._accept_thread.join(timeout)
+        if self.own_dispatcher:
+            self.dispatcher.close(timeout)
+
+    def serve_forever(self, poll_s: float = 0.2) -> None:
+        """Block the calling thread until ``close()`` (the CLI uses this;
+        embedders just keep the object around)."""
+        while not self._closed.is_set():
+            time.sleep(poll_s)
+
+    # -- loops ---------------------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._closed.is_set():
+            try:
+                conn, _addr = self._sock.accept()
+            except OSError:
+                if self._closed.is_set():
+                    break  # listener closed by close()
+                # transient accept failure (EMFILE under an fd burst,
+                # ECONNABORTED from a mid-handshake RST): the listener is
+                # still good — back off briefly and keep accepting rather
+                # than silently never answering another client
+                time.sleep(0.05)
+                continue
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            with self._conns_lock:
+                self._conns.append(conn)
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             name="rpc-conn", daemon=True).start()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        try:
+            while not self._closed.is_set():
+                try:
+                    req = recv_frame(conn)
+                except (ConnectionError, OSError):
+                    return
+                except Exception:
+                    # non-protocol peer (port scanner, HTTP probe) or a
+                    # corrupt/hostile frame: we cannot answer in-protocol
+                    # (there is no frame boundary to resync to), so drop
+                    # the connection — but never the handler thread
+                    return
+                try:
+                    resp = self._handle(req)
+                except Exception as exc:  # never kill the conn on one op
+                    resp = {"ok": False, "error": f"{type(exc).__name__}: "
+                                                  f"{exc}"}
+                try:
+                    send_frame(conn, resp)
+                except (ConnectionError, OSError):
+                    return
+                if isinstance(req, dict) and req.get("op") == "shutdown":
+                    # the response frame is on the wire (sendall returned)
+                    # — only now is it safe to tear the listener down
+                    threading.Thread(target=self.close,
+                                     name="rpc-shutdown",
+                                     daemon=True).start()
+                    return
+        finally:
+            with self._conns_lock:
+                if conn in self._conns:
+                    self._conns.remove(conn)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    # -- op handlers ---------------------------------------------------------
+    def _handle(self, req: Any) -> Dict[str, Any]:
+        if not isinstance(req, dict) or "op" not in req:
+            return {"ok": False, "error": "malformed request (no op)"}
+        op = req["op"]
+        timeout = float(req.get("timeout", 120.0))
+        if op == "ping":
+            return {"ok": True, "pong": time.time(),
+                    "uptime_s": time.time() - self.started_unix}
+        if op == "plan":
+            mat = matrix_from_wire(req["matrix"])
+            t0 = time.perf_counter()
+            plan = self.dispatcher.submit(mat).result(timeout=timeout)
+            return {"ok": True, "plan": plan,
+                    "server_ms": (time.perf_counter() - t0) * 1e3}
+        if op == "plan_batch":
+            mats = [matrix_from_wire(d) for d in req["matrices"]]
+            plans = self.dispatcher.handle(mats, timeout=timeout)
+            return {"ok": True, "plans": plans}
+        if op == "select":
+            mats = [matrix_from_wire(d) for d in req["matrices"]]
+            names = self.dispatcher.builder.select_names(mats)
+            return {"ok": True, "algorithms": names}
+        if op == "stats":
+            return {"ok": True, "stats": self.dispatcher.stats()}
+        if op == "shutdown":
+            # teardown is deferred to _serve_conn AFTER the response is
+            # sent — closing here would race conn.shutdown() against our
+            # own reply and the client could see ECONNRESET instead of ok
+            return {"ok": True}
+        return {"ok": False, "error": f"unknown op {op!r}"}
+
+
+# ---------------------------------------------------------------------------
+# client
+# ---------------------------------------------------------------------------
+
+class PlanRPCClient:
+    """Blocking client for :class:`PlanRPCServer` (one socket, in-order).
+
+    Usable from any process with network reach to the server — no jax, no
+    trained model, no cache directory needed on the client side::
+
+        with PlanRPCClient("127.0.0.1", port) as c:
+            plan = c.plan(matrix)          # ExecutionPlan, cold or warm
+            names = c.select([m1, m2])     # algorithm names only
+            print(c.stats()["hit_rate"])
+
+    ``connect_retries`` retries the initial TCP connect (a just-spawned
+    server may not be listening yet). Not thread-safe; use one client per
+    thread (connections are cheap, and the server batches across them).
+    """
+
+    def __init__(self, host: str, port: int, *, timeout: float = 120.0,
+                 connect_retries: int = 20, retry_delay_s: float = 0.25):
+        self.timeout = timeout
+        last: Optional[Exception] = None
+        for _ in range(max(1, connect_retries)):
+            try:
+                self._sock = socket.create_connection((host, port),
+                                                      timeout=timeout)
+                break
+            except OSError as exc:
+                last = exc
+                time.sleep(retry_delay_s)
+        else:
+            raise ConnectionError(
+                f"could not reach plan server at {host}:{port}: {last}")
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+
+    # -- plumbing ------------------------------------------------------------
+    def _call(self, op: str, **payload) -> Dict[str, Any]:
+        payload["op"] = op
+        payload.setdefault("timeout", self.timeout)
+        send_frame(self._sock, payload)
+        resp = recv_frame(self._sock)
+        if not resp.get("ok"):
+            raise RPCError(resp.get("error", "unknown server error"))
+        return resp
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "PlanRPCClient":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    # -- ops -----------------------------------------------------------------
+    def ping(self) -> Dict[str, Any]:
+        return self._call("ping")
+
+    def plan(self, mat: CSRMatrix):
+        """One matrix → its :class:`ExecutionPlan` (server-cached)."""
+        return self._call("plan", matrix=matrix_to_wire(mat))["plan"]
+
+    def plan_with_timing(self, mat: CSRMatrix):
+        """(plan, server-side milliseconds) — the smoke test uses the
+        server time to show warm ≪ cold independent of network jitter."""
+        r = self._call("plan", matrix=matrix_to_wire(mat))
+        return r["plan"], r["server_ms"]
+
+    def plan_batch(self, mats: Sequence[CSRMatrix]) -> List:
+        return self._call("plan_batch",
+                          matrices=[matrix_to_wire(m) for m in mats])["plans"]
+
+    def select(self, mats: Sequence[CSRMatrix]) -> List[str]:
+        return self._call("select",
+                          matrices=[matrix_to_wire(m)
+                                    for m in mats])["algorithms"]
+
+    def stats(self) -> Dict[str, Any]:
+        return self._call("stats")["stats"]
+
+    def shutdown(self) -> None:
+        self._call("shutdown")
+
+
+# ---------------------------------------------------------------------------
+# entrypoint: serve a trained engine over RPC / run the CI smoke
+# ---------------------------------------------------------------------------
+
+def _train_tiny_engine(args):
+    from repro.core.labeling import load_or_build
+    from repro.engine import EngineConfig, SolverEngine
+
+    engine = SolverEngine(EngineConfig(
+        model=args.model, cache_dir=args.cache_dir or None,
+        serving_devices=args.devices, batch_size=args.batch,
+        fast_grids=True, cv=3, seed=0))
+    ds = load_or_build(cache_dir="artifacts", count=args.campaign_count,
+                       seed=7, size_scale=args.campaign_scale, repeats=1,
+                       verbose=False)
+    rep = engine.train(ds)
+    print(f"[rpc] model={args.model} test_acc={rep['test_accuracy']:.2f} "
+          f"fingerprint={engine.fingerprint[:16]}")
+    return engine
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=0,
+                   help="0 binds an ephemeral port (printed)")
+    p.add_argument("--bundle", default=None,
+                   help="serve this SelectorBundle instead of training")
+    p.add_argument("--model", default="decision_tree")
+    p.add_argument("--devices", type=int, default=None,
+                   help="serving-mesh device count (None: degenerate 1)")
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--cache-dir", default="artifacts/plan_cache")
+    p.add_argument("--campaign-count", type=int, default=12)
+    p.add_argument("--campaign-scale", type=float, default=0.25)
+    p.add_argument("--smoke", action="store_true",
+                   help="serve, then run a cold+warm round trip from a "
+                        "separate client process and exit nonzero on "
+                        "failure (the CI leg)")
+    args = p.parse_args()
+
+    from repro.engine import EngineConfig, SolverEngine
+
+    if args.bundle:
+        engine = SolverEngine.load(args.bundle, EngineConfig(
+            cache_dir=args.cache_dir or None, serving_devices=args.devices,
+            batch_size=args.batch))
+    else:
+        engine = _train_tiny_engine(args)
+
+    server = engine.serve(rpc=True, host=args.host, port=args.port)
+    print(f"[rpc] serving on {server.host}:{server.port} "
+          f"(mesh devices: {args.devices or 1})", flush=True)
+
+    if args.smoke:
+        rc = _smoke(server)
+        server.close()
+        raise SystemExit(rc)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        server.close()
+
+
+def _smoke(server: PlanRPCServer) -> int:
+    """Cold + warm request from a *separate client process* (the
+    acceptance criterion): the child connects over TCP, plans the same
+    structure twice, and asserts the second hit is served from cache."""
+    import json
+    import subprocess
+    import sys
+
+    child = (
+        "import json, sys\n"
+        "import numpy as np\n"
+        "from repro.launch.rpc import PlanRPCClient\n"
+        "from repro.sparse.dataset import grid2d\n"
+        "port = int(sys.argv[1])\n"
+        "m = grid2d(9, 9, 'smoke')\n"
+        "with PlanRPCClient('127.0.0.1', port) as c:\n"
+        "    pong = c.ping()\n"
+        "    plan_cold, ms_cold = c.plan_with_timing(m)\n"
+        "    plan_warm, ms_warm = c.plan_with_timing(m)\n"
+        "    stats = c.stats()\n"
+        "assert plan_cold.algorithm == plan_warm.algorithm\n"
+        "assert np.array_equal(plan_cold.perm, plan_warm.perm)\n"
+        "assert stats['warm_hits'] >= 1, stats\n"
+        "print(json.dumps({'cold_ms': ms_cold, 'warm_ms': ms_warm,\n"
+        "                  'algorithm': plan_cold.algorithm,\n"
+        "                  'warm_hits': stats['warm_hits']}))\n"
+    )
+    r = subprocess.run([sys.executable, "-c", child, str(server.port)],
+                       capture_output=True, text=True, timeout=300)
+    if r.returncode != 0:
+        print(f"[rpc-smoke] FAIL\n{r.stdout}\n{r.stderr}")
+        return 1
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    print(f"[rpc-smoke] OK cold {out['cold_ms']:.1f} ms → warm "
+          f"{out['warm_ms']:.2f} ms ({out['algorithm']}, "
+          f"{out['warm_hits']} warm hits)")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

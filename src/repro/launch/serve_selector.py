@@ -23,6 +23,12 @@ server starts warm.
 :class:`SelectorServer` — the PR-1 synchronous, name-only front-end — is
 kept for callers that only want the algorithm label.
 
+The micro-batching pipeline itself lives in
+:mod:`repro.core.dispatch` (:class:`~repro.core.dispatch.PlanDispatcher`);
+:class:`AsyncPlanServer` is its in-process name, and the RPC front-end
+(:mod:`repro.launch.rpc`) puts a socket protocol in front of the same
+core for out-of-process clients.
+
 The demo entrypoint drives everything through :class:`repro.engine
 .SolverEngine` (``engine.train(ds)`` → ``engine.serve()``), whose
 model-fingerprint cache versioning guarantees a retrained selector never
@@ -32,21 +38,15 @@ from __future__ import annotations
 
 import argparse
 import collections
-import dataclasses
-import queue
-import threading
 import time
-from concurrent.futures import Future
 from typing import Dict, List, Sequence
 
-from repro.core.plan import ExecutionPlan, PlanBuilder
+from repro.core.dispatch import PlanDispatcher
 from repro.core.plan_cache import PlanCache, matrix_fingerprint
 from repro.core.selector import ReorderSelector
 from repro.sparse.csr import CSRMatrix
 
 __all__ = ["SelectorServer", "AsyncPlanServer", "main"]
-
-_SENTINEL = object()
 
 
 class SelectorServer:
@@ -112,225 +112,20 @@ class SelectorServer:
 
 
 # ---------------------------------------------------------------------------
-# Async plan pipeline
+# Async plan pipeline — the in-process face of the dispatch core
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
-class _PlanRequest:
-    mat: CSRMatrix
-    key: str
-    future: "Future[ExecutionPlan]"
-    t_submit: float
+class AsyncPlanServer(PlanDispatcher):
+    """In-process async plan server.
 
-
-class AsyncPlanServer:
-    """Request queue → deadline micro-batches → staged cold path.
-
-    * ``submit`` fingerprints the matrix; a cache hit resolves the returned
-      future immediately (the warm path never enters the queue), a miss is
-      enqueued.
-    * One **batcher** thread collects misses until ``batch_size`` requests
-      are waiting or the oldest has aged ``max_wait_ms``, deduplicates by
-      fingerprint, re-checks the cache (a sibling batch may have built the
-      plan meanwhile), and runs the selector's padded feature-batch +
-      device inference over the remaining structures.
-    * ``build_workers`` **builder** threads take per-structure (matrix,
-      algorithm) items, run reorder + symbolic analysis, install the plan
-      in the shared (thread-safe) cache, and resolve every future waiting
-      on that fingerprint — so plan builds for one micro-batch overlap the
-      next micro-batch's inference.
+    This is :class:`repro.core.dispatch.PlanDispatcher` under its serving
+    name — the full deadline micro-batching pipeline (warm-path futures,
+    batcher thread, in-flight dedup, plan-build worker pool) with requests
+    submitted by direct method call. The RPC front-end
+    (:class:`repro.launch.rpc.PlanRPCServer`) wraps this same class to
+    serve out-of-process clients; keeping the name alive preserves every
+    existing import and ``SolverEngine.serve()`` contract.
     """
-
-    def __init__(self, builder: PlanBuilder, *, batch_size: int = 16,
-                 max_wait_ms: float = 5.0, build_workers: int = 2,
-                 latency_window: int = 100_000):
-        assert builder.selector is not None, "cold path needs a selector"
-        self.builder = builder
-        self.cache = builder.cache
-        self.batch_size = batch_size
-        self.max_wait = max_wait_ms / 1e3
-        self.requests = 0
-        self._queue: "queue.Queue" = queue.Queue()
-        self._build_queue: "queue.Queue" = queue.Queue()
-        self._lat_lock = threading.Lock()
-        # bounded: a long-running server keeps a sliding window, not every
-        # latency ever observed (percentiles stay O(window))
-        self._latencies: "collections.deque[float]" = collections.deque(
-            maxlen=latency_window)
-        self._warm = 0
-        # keys whose plan build is in flight → requests waiting on it, so a
-        # later micro-batch joins the pending build instead of duplicating
-        # the selection + build work (guarded by _inflight_lock; builders
-        # cache.put *before* popping, so a racer either finds the in-flight
-        # entry or peeks the finished plan — never neither)
-        self._inflight_lock = threading.Lock()
-        self._inflight: Dict[str, List[_PlanRequest]] = {}
-        # serializes enqueue-vs-shutdown so no request can land behind the
-        # sentinel with a forever-pending future
-        self._close_lock = threading.Lock()
-        self._closed = False
-        self._batcher = threading.Thread(target=self._batch_loop,
-                                         name="plan-batcher", daemon=True)
-        self._builders = [threading.Thread(target=self._build_loop,
-                                           name=f"plan-builder-{i}",
-                                           daemon=True)
-                          for i in range(max(1, build_workers))]
-        self._batcher.start()
-        for t in self._builders:
-            t.start()
-
-    # -- client surface ------------------------------------------------------
-    def submit(self, mat: CSRMatrix) -> "Future[ExecutionPlan]":
-        with self._lat_lock:
-            self.requests += 1
-        t0 = time.perf_counter()
-        key = matrix_fingerprint(mat)
-        fut: "Future[ExecutionPlan]" = Future()
-        plan = self.cache.get(key)
-        if plan is not None:
-            self._record(t0)
-            with self._lat_lock:
-                self._warm += 1
-            fut.set_result(plan)
-            return fut
-        with self._close_lock:
-            if self._closed:
-                raise RuntimeError("server closed")
-            self._queue.put(_PlanRequest(mat, key, fut, t0))
-        return fut
-
-    def handle(self, mats: Sequence[CSRMatrix],
-               timeout: float = 120.0) -> List[ExecutionPlan]:
-        futs = [self.submit(m) for m in mats]
-        return [f.result(timeout=timeout) for f in futs]
-
-    def close(self, timeout: float = 30.0) -> None:
-        with self._close_lock:
-            if self._closed:
-                return
-            self._closed = True
-            self._queue.put(_SENTINEL)
-        self._batcher.join(timeout)
-        for t in self._builders:
-            t.join(timeout)
-
-    def reset_stats(self) -> None:
-        """Zero the serving metrics (latency window, warm/request counts,
-        builder + cache counters) — e.g. after an untimed jit warm-up, so
-        the reported numbers reflect steady-state serving only."""
-        with self._lat_lock:
-            self._latencies.clear()
-            self._warm = 0
-            self.requests = 0
-        self.builder.reset_stats()  # resets the cache counters too
-
-    def stats(self) -> dict:
-        s = self.builder.stats()
-        with self._lat_lock:
-            lats = list(self._latencies)
-            warm = self._warm
-            requests = self.requests
-        s.update(requests=requests, warm_hits=warm)
-        if lats:
-            import numpy as np
-
-            arr = np.asarray(lats)
-            s.update(p50_ms=float(np.percentile(arr, 50) * 1e3),
-                     p99_ms=float(np.percentile(arr, 99) * 1e3),
-                     mean_ms=float(arr.mean() * 1e3))
-        return s
-
-    def _record(self, t_submit: float) -> None:
-        with self._lat_lock:
-            self._latencies.append(time.perf_counter() - t_submit)
-
-    # -- stage 1: micro-batcher (feature-batch + device inference) -----------
-    def _batch_loop(self) -> None:
-        stop = False
-        while not stop:
-            item = self._queue.get()
-            if item is _SENTINEL:
-                break
-            batch: List[_PlanRequest] = [item]
-            deadline = time.perf_counter() + self.max_wait
-            while len(batch) < self.batch_size:
-                remain = deadline - time.perf_counter()
-                if remain <= 0:
-                    break
-                try:
-                    nxt = self._queue.get(timeout=remain)
-                except queue.Empty:
-                    break
-                if nxt is _SENTINEL:
-                    stop = True
-                    break
-                batch.append(nxt)
-            self._dispatch(batch)
-        self._build_queue.put(_SENTINEL)
-
-    def _dispatch(self, batch: List[_PlanRequest]) -> None:
-        groups: Dict[str, List[_PlanRequest]] = {}
-        for r in batch:
-            groups.setdefault(r.key, []).append(r)
-        todo: List[str] = []
-        for key, reqs in groups.items():
-            with self._inflight_lock:
-                pending = self._inflight.get(key)
-                if pending is not None:
-                    pending.extend(reqs)  # join the build already in flight
-                    continue
-                plan = self.cache.peek(key)  # a sibling may have built it
-                if plan is None:
-                    self._inflight[key] = reqs
-                    todo.append(key)
-            if plan is not None:
-                for r in reqs:
-                    self._record(r.t_submit)
-                    r.future.set_result(plan)
-        if not todo:
-            return
-        try:
-            names = self.builder.select_names(
-                [self._inflight[key][0].mat for key in todo])
-        except Exception as exc:  # selector failure fails the whole batch
-            for key in todo:
-                with self._inflight_lock:
-                    reqs = self._inflight.pop(key, [])
-                for r in reqs:
-                    r.future.set_exception(exc)
-            return
-        for key, name in zip(todo, names):
-            self._build_queue.put((key, name))
-
-    # -- stage 2: plan build (reorder + symbolic) ----------------------------
-    def _build_loop(self) -> None:
-        while True:
-            item = self._build_queue.get()
-            if item is _SENTINEL:
-                self._build_queue.put(_SENTINEL)  # release sibling workers
-                return
-            key, name = item
-            mat = self._inflight[key][0].mat  # entry exists until we pop it
-            try:
-                plan = self.builder.build(mat, algorithm=name,
-                                          fingerprint=key)
-            except Exception as exc:
-                with self._inflight_lock:
-                    reqs = self._inflight.pop(key, [])
-                for r in reqs:
-                    r.future.set_exception(exc)
-                continue
-            try:
-                self.cache.put(key, plan)  # put, *then* pop (see _inflight)
-            except Exception:
-                # a disk-tier write failure must not fail the waiters: the
-                # build succeeded and the memory tier is already populated
-                pass
-            with self._inflight_lock:
-                reqs = self._inflight.pop(key, [])
-            for r in reqs:
-                self._record(r.t_submit)
-                r.future.set_result(plan)
 
 
 # ---------------------------------------------------------------------------

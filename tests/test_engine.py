@@ -258,7 +258,7 @@ def test_refit_invalidates_persisted_plans(tmp_path):
     # version: the first plan() after retraining MUST rebuild, not hit
     assert s2["misses"] >= 1 and s2["plans_built"] == 1
     assert s2["hits"] == 0
-    files = os.listdir(cache_dir)
+    files = [f for f in os.listdir(cache_dir) if f.endswith(".plan.pkl")]
     assert len(files) == 2  # one plan file per fingerprint version
     assert len({f.split(".")[1] for f in files}) == 2
 
@@ -324,7 +324,8 @@ def test_disk_eviction_prefers_oldest(tmp_path):
         # force distinct mtimes so LRU-by-mtime order is deterministic
         os.utime(cache._path(f"k{i}"), (1_000_000 + i, 1_000_000 + i))
         cache._evict_disk()
-    kept = sorted(os.listdir(str(tmp_path)))
+    kept = sorted(f for f in os.listdir(str(tmp_path))
+                  if f.endswith(".plan.pkl"))
     assert [f.split(".")[0] for f in kept] == ["k2", "k3"]
 
 
@@ -339,7 +340,8 @@ def test_disk_hit_refreshes_lru_position(tmp_path):
                           max_disk_entries=2)
     assert c2.get("k0") == 0
     c2.put("k9", 9)
-    kept = {f.split(".")[0] for f in os.listdir(str(tmp_path))}
+    kept = {f.split(".")[0] for f in os.listdir(str(tmp_path))
+            if f.endswith(".plan.pkl")}
     assert kept == {"k0", "k9"}
 
 
@@ -357,3 +359,100 @@ def test_engine_imports_clean_of_deprecation_warnings():
          "import repro.engine; import repro.core.selector"],
         capture_output=True, text=True, env=env)
     assert proc.returncode == 0, proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# bundle schema v2: report card + provenance
+# ---------------------------------------------------------------------------
+
+def test_v2_bundle_carries_report_card_and_provenance(tmp_path):
+    engine = make_engine(tmp_path)
+    path = str(tmp_path / "sel.bundle")
+    engine.save(path)
+    b = SelectorBundle.load(path)
+    assert b.schema_version == 2
+    # report card: held-out accuracy + per-algorithm recall + kxk confusion
+    card = b.report_card
+    assert card is not None
+    assert card["test_accuracy"] == engine.last_report["test_accuracy"]
+    k = len(b.algorithms)
+    assert len(card["confusion"]) == k
+    assert all(len(row) == k for row in card["confusion"])
+    assert set(card["per_algorithm_recall"]) == set(b.algorithms)
+    assert sum(card["test_support"].values()) == sum(
+        sum(row) for row in card["confusion"])
+    # provenance: the dataset the selector was fitted on
+    prov = b.provenance
+    assert prov is not None
+    assert prov["n_samples"] == 40 and prov["algorithms"] == list(
+        b.algorithms)
+    assert prov["feature_set"] == "paper12"
+    assert sum(prov["label_counts"].values()) == prov["n_samples"]
+
+
+def test_v1_bundle_still_loads(tmp_path):
+    """A pre-report-card (schema v1) envelope loads with both v2 sections
+    None and the same fingerprint (the card is fingerprint-exempt)."""
+    engine = make_engine(tmp_path)
+    path = str(tmp_path / "sel.bundle")
+    engine.save(path)
+    with open(path, "rb") as f:
+        env = pickle.load(f)
+    env["schema_version"] = 1
+    env["bundle"]["schema_version"] = 1
+    del env["bundle"]["report_card"]
+    del env["bundle"]["provenance"]
+    v1_path = str(tmp_path / "v1.bundle")
+    with open(v1_path, "wb") as f:
+        pickle.dump(env, f)
+
+    b = SelectorBundle.load(v1_path)
+    assert b.schema_version == 1
+    assert b.report_card is None and b.provenance is None
+    assert b.fingerprint == SelectorBundle.load(path).fingerprint
+    engine2 = SolverEngine.load(v1_path)
+    assert engine2.fingerprint == engine.fingerprint
+
+
+def test_newer_schema_rejected(tmp_path):
+    engine = make_engine(tmp_path)
+    path = str(tmp_path / "sel.bundle")
+    engine.save(path)
+    with open(path, "rb") as f:
+        env = pickle.load(f)
+    env["bundle"]["schema_version"] = 99
+    with open(path, "wb") as f:
+        pickle.dump(env, f)
+    with pytest.raises(BundleValidationError, match="newer"):
+        SelectorBundle.load(path)
+
+
+def test_report_card_is_fingerprint_exempt(tmp_path):
+    """Editing the card must not trip the tamper check (it is descriptive,
+    not behavioural) — but a malformed confusion matrix is rejected."""
+    engine = make_engine(tmp_path)
+    path = str(tmp_path / "sel.bundle")
+    engine.save(path)
+    with open(path, "rb") as f:
+        env = pickle.load(f)
+    env["bundle"]["report_card"]["test_accuracy"] = 1.0  # embellished, fine
+    with open(path, "wb") as f:
+        pickle.dump(env, f)
+    assert SelectorBundle.load(path).report_card["test_accuracy"] == 1.0
+
+    env["bundle"]["report_card"]["confusion"] = [[1, 2]]  # wrong shape
+    with open(path, "wb") as f:
+        pickle.dump(env, f)
+    with pytest.raises(BundleValidationError, match="confusion"):
+        SelectorBundle.load(path)
+
+
+def test_attach_built_engine_saves_without_card(tmp_path):
+    engine = make_engine(tmp_path)
+    fresh = SolverEngine(EngineConfig(path="host"),
+                         selector=engine.selector)
+    path = str(tmp_path / "attached.bundle")
+    fresh.save(path)
+    b = SelectorBundle.load(path)
+    assert b.schema_version == 2
+    assert b.report_card is None and b.provenance is None

@@ -1,0 +1,218 @@
+"""RPC front-end: framing, round trips, separate-process clients.
+
+The server under test wraps a real dispatch pipeline (micro-batcher +
+build workers) over a tiny in-memory-cached engine, bound to an ephemeral
+localhost port. The acceptance-path test talks to it from a *separate
+client process* — cold request builds a plan, warm request is served from
+cache — which is exactly what the CI smoke (``repro.launch.rpc --smoke``)
+re-runs on the 4-virtual-device leg.
+"""
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.features import FEATURE_NAMES, extract_features_batch
+from repro.core.ml import RandomForestClassifier
+from repro.core.scaling import SCALERS
+from repro.core.selector import ReorderSelector
+from repro.engine import EngineConfig, SolverEngine
+from repro.launch.rpc import (PlanRPCClient, PlanRPCServer, RPCError,
+                              matrix_from_wire, matrix_to_wire, recv_frame,
+                              send_frame)
+from repro.sparse.dataset import generate_suite
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(scope="module")
+def mats():
+    return list(generate_suite(count=8, seed=3, size_scale=0.25))
+
+
+@pytest.fixture(scope="module")
+def engine(mats):
+    feats = extract_features_batch(mats)
+    labels = (feats[:, FEATURE_NAMES.index("bandwidth")]
+              / np.maximum(feats[:, 0], 1) > 0.5).astype(int)
+    # resolve the scaler through the registry at fixture time: the engine
+    # fingerprints by registry name_of(), and test_engine.py's reload-
+    # tolerance test swaps the registered class mid-suite — a class
+    # imported at collection time would no longer resolve
+    scaler = SCALERS["standard"]().fit(feats)
+    rf = RandomForestClassifier(n_estimators=8).fit(
+        scaler.transform(feats), labels)
+    sel = ReorderSelector(rf, scaler, ["amd", "rcm"])
+    return SolverEngine(EngineConfig(cache_dir=None, batch_size=4,
+                                     max_wait_ms=2.0), selector=sel)
+
+
+@pytest.fixture()
+def server(engine):
+    srv = engine.serve(rpc=True, port=0)
+    yield srv
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# framing + wire format
+# ---------------------------------------------------------------------------
+
+def test_frame_round_trip():
+    a, b = socket.socketpair()
+    try:
+        payload = {"op": "x", "arr": np.arange(7, dtype=np.int32)}
+        send_frame(a, payload)
+        got = recv_frame(b)
+        assert got["op"] == "x"
+        np.testing.assert_array_equal(got["arr"], payload["arr"])
+    finally:
+        a.close()
+        b.close()
+
+
+def test_matrix_wire_round_trip(mats):
+    m = mats[0]
+    back = matrix_from_wire(matrix_to_wire(m))
+    assert back.n == m.n and back.nnz == m.nnz
+    np.testing.assert_array_equal(back.indptr, m.indptr)
+    np.testing.assert_array_equal(back.indices, m.indices)
+    np.testing.assert_array_equal(back.data, m.data)
+
+
+# ---------------------------------------------------------------------------
+# in-process client round trips
+# ---------------------------------------------------------------------------
+
+def test_ping_plan_select_stats(server, mats):
+    with PlanRPCClient(server.host, server.port) as c:
+        assert c.ping()["ok"]
+        plan, cold_ms = c.plan_with_timing(mats[0])
+        assert plan.algorithm in ("amd", "rcm")
+        assert sorted(plan.perm.tolist()) == list(range(mats[0].n))
+        plan2, _warm_ms = c.plan_with_timing(mats[0])
+        assert np.array_equal(plan.perm, plan2.perm)
+        names = c.select(mats[:4])
+        assert all(n in ("amd", "rcm") for n in names)
+        s = c.stats()
+        assert s["requests"] >= 2 and s["warm_hits"] >= 1
+
+
+def test_plan_batch_op(server, mats):
+    with PlanRPCClient(server.host, server.port) as c:
+        plans = c.plan_batch(mats)
+        assert len(plans) == len(mats)
+        for m, p in zip(mats, plans):
+            assert sorted(p.perm.tolist()) == list(range(m.n))
+
+
+def test_unknown_op_and_malformed(server):
+    with PlanRPCClient(server.host, server.port) as c:
+        with pytest.raises(RPCError, match="unknown op"):
+            c._call("definitely-not-an-op")
+        send_frame(c._sock, ["not", "a", "dict"])
+        resp = recv_frame(c._sock)
+        assert not resp["ok"] and "malformed" in resp["error"]
+        # connection survives a bad request
+        assert c.ping()["ok"]
+
+
+def test_concurrent_clients_batch_together(server, mats):
+    """Several client connections in flight at once all resolve — their
+    misses fan into one micro-batching queue."""
+    errs = []
+
+    def one(i):
+        try:
+            with PlanRPCClient(server.host, server.port) as c:
+                p = c.plan(mats[i % len(mats)])
+                assert p.algorithm in ("amd", "rcm")
+        except Exception as exc:  # pragma: no cover - diagnostic
+            errs.append(exc)
+
+    ts = [threading.Thread(target=one, args=(i,)) for i in range(6)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(120)
+    assert not errs
+
+
+def test_shutdown_op_acks_before_teardown(engine):
+    """The shutdown response must reach the client — teardown is deferred
+    until the ack frame is on the wire, so shutdown() never sees a reset."""
+    srv = engine.serve(rpc=True, port=0)
+    with PlanRPCClient(srv.host, srv.port, timeout=30) as c:
+        c.shutdown()  # raises if the server resets before answering
+    srv._accept_thread.join(30)
+    assert srv._closed.is_set()
+    srv.close()  # idempotent with the op-triggered close
+
+
+def test_garbage_frames_do_not_kill_server(server, mats):
+    """Non-protocol peers (scanners, HTTP probes, corrupt frames) get
+    dropped; the server keeps serving real clients."""
+    import struct
+
+    # oversized length prefix
+    s1 = socket.create_connection((server.host, server.port), timeout=10)
+    s1.sendall(struct.pack(">I", (1 << 30) + 1) + b"xx")
+    # valid length, garbage (unpicklable) payload
+    s2 = socket.create_connection((server.host, server.port), timeout=10)
+    s2.sendall(struct.pack(">I", 4) + b"\x00\x01\x02\x03")
+    for s in (s1, s2):  # both connections get closed server-side
+        try:
+            assert s.recv(1) == b""  # clean EOF …
+        except OSError:
+            pass  # … or RST (unread bytes pending at close) — both fine
+        s.close()
+    with PlanRPCClient(server.host, server.port) as c:  # still serving
+        assert c.ping()["ok"]
+        assert c.plan(mats[0]).algorithm in ("amd", "rcm")
+
+
+def test_close_idempotent_and_drops_live_clients(engine):
+    srv = engine.serve(rpc=True, port=0)
+    c = PlanRPCClient(srv.host, srv.port, timeout=10)
+    assert c.ping()["ok"]
+    srv.close()
+    srv.close()  # second close is a no-op
+    # the established connection was shut down server-side: the next call
+    # sees EOF (ConnectionError) or a reset (OSError) — never a hang
+    with pytest.raises((ConnectionError, OSError)):
+        c.ping()
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# the acceptance path: a separate client PROCESS, cold + warm
+# ---------------------------------------------------------------------------
+
+def test_cold_and_warm_from_separate_process(server, mats):
+    child = textwrap.dedent("""
+        import sys
+        import numpy as np
+        from repro.launch.rpc import PlanRPCClient
+        from repro.sparse.dataset import grid2d
+        port = int(sys.argv[1])
+        m = grid2d(8, 8, "rpc-proc")
+        with PlanRPCClient("127.0.0.1", port) as c:
+            cold, _ = c.plan_with_timing(m)
+            warm, _ = c.plan_with_timing(m)
+            stats = c.stats()
+        assert cold.algorithm == warm.algorithm
+        assert np.array_equal(cold.perm, warm.perm)
+        assert stats["warm_hits"] >= 1, stats
+        print("PROC-RPC-OK", cold.algorithm)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", child, str(server.port)],
+                       capture_output=True, text=True, timeout=420, env=env)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "PROC-RPC-OK" in r.stdout
