@@ -1,0 +1,288 @@
+"""Traffic replay: Zipfian, bursty load against the RPC serving plane.
+
+    PYTHONPATH=src python -m benchmarks.traffic_replay \
+        --requests 400 --distinct 32 --clients 4 --deadline-ms 2000
+
+The serving plane's production story — admission control, deadline
+shedding, priority batching, per-stage telemetry — is only credible under
+*realistic* traffic, which means skew and bursts, not a uniform for-loop:
+
+* **Zipfian structure keys.** Real workloads re-solve a few hot sparsity
+  structures constantly (the same mesh each timestep, the same circuit
+  per corner) and a long tail rarely: request keys are drawn with
+  p(rank) ∝ 1/rank^alpha over a pool of distinct structures, so the plan
+  cache sees a realistic hot set.
+* **Bursty arrivals.** Requests arrive in bursts of ``--burst`` with
+  ``--pause-ms`` gaps, fanned out by ``--clients`` concurrent RPC client
+  threads — exactly the fan-in the micro-batcher and the bounded queue
+  exist for.
+
+Every request travels the wire with a ``deadline_ms`` (and hot keys get
+``priority`` when ``--hot-priority`` is set), so the run measures the full
+RequestContext machinery end-to-end: per-stage spans come back in each
+response, shed/rejected requests surface as typed errors, and the server's
+metrics snapshot supplies queue depth and cache tiers.
+
+The run writes ``BENCH_traffic.json`` (p50/p99 per stage, client-observed
+latency, shed rate, reject rate, hit rates, queue depth) — the repo's
+serving-perf trajectory file — and ``--gate-shed-rate`` turns it into a CI
+gate: exit nonzero when the shed rate at the calibrated load exceeds the
+bound.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+
+
+def parse_args():
+    p = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    p.add_argument("--requests", type=int, default=400)
+    p.add_argument("--distinct", type=int, default=32,
+                   help="distinct structures in the key pool")
+    p.add_argument("--zipf-alpha", type=float, default=1.1,
+                   help="popularity skew: p(rank) ∝ 1/rank^alpha")
+    p.add_argument("--burst", type=int, default=32,
+                   help="requests per arrival burst")
+    p.add_argument("--pause-ms", type=float, default=50.0,
+                   help="idle gap between bursts")
+    p.add_argument("--clients", type=int, default=4,
+                   help="concurrent RPC client threads")
+    p.add_argument("--deadline-ms", type=float, default=5000.0,
+                   help="per-request deadline carried on the wire "
+                        "(0/negative: none)")
+    p.add_argument("--hot-priority", action="store_true",
+                   help="send the hottest decile of keys at priority 1")
+    p.add_argument("--max-queue", type=int, default=256,
+                   help="dispatcher admission-control bound")
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--max-wait-ms", type=float, default=5.0)
+    p.add_argument("--build-workers", type=int, default=2)
+    p.add_argument("--model", default="decision_tree")
+    p.add_argument("--devices", type=int, default=None,
+                   help="serving-mesh width (forces N virtual host devices)")
+    p.add_argument("--campaign-count", type=int, default=12)
+    p.add_argument("--campaign-scale", type=float, default=0.25)
+    p.add_argument("--size-scale", type=float, default=0.35,
+                   help="size of the replayed structures")
+    p.add_argument("--seed", type=int, default=7)
+    p.add_argument("--warmup", type=int, default=2,
+                   help="untimed warm-up requests (jit compile)")
+    p.add_argument("--out", default="BENCH_traffic.json")
+    p.add_argument("--gate-shed-rate", type=float, default=None,
+                   help="exit nonzero if shed+reject rate exceeds this")
+    return p.parse_args()
+
+
+def _pct(xs, q):
+    if not xs:
+        return 0.0
+    data = sorted(xs)
+    return data[max(0, min(len(data) - 1,
+                           int(round(q / 100.0 * (len(data) - 1)))))]
+
+
+def main() -> int:
+    args = parse_args()
+    if args.devices is not None and args.devices > 1:
+        # must precede jax backend init — hence stdlib-only module imports
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
+
+    import numpy as np
+
+    from repro.core.labeling import load_or_build
+    from repro.core.reqctx import DeadlineExceeded, QueueFull
+    from repro.engine import EngineConfig, SolverEngine
+    from repro.launch.rpc import PlanRPCClient, RPCError
+    from repro.sparse.dataset import generate_suite
+
+    deadline_ms = args.deadline_ms if args.deadline_ms > 0 else None
+
+    # -- serve a tiny trained engine over RPC, in this process --------------
+    engine = SolverEngine(EngineConfig(
+        model=args.model, cache_dir=None, batch_size=args.batch,
+        max_wait_ms=args.max_wait_ms, build_workers=args.build_workers,
+        max_queue=args.max_queue, serving_devices=args.devices,
+        fast_grids=True, cv=3, seed=0))
+    ds = load_or_build(cache_dir=os.environ.get("REPRO_ARTIFACTS",
+                                                "artifacts"),
+                       count=args.campaign_count, seed=7,
+                       size_scale=args.campaign_scale, repeats=1,
+                       verbose=False)
+    rep = engine.train(ds)
+    server = engine.serve(rpc=True, port=0)
+    print(f"[traffic] model={args.model} "
+          f"test_acc={rep['test_accuracy']:.2f} serving on "
+          f"127.0.0.1:{server.port} (mesh {args.devices or 1})")
+
+    # -- the request stream: Zipfian keys in bursts --------------------------
+    pool = list(generate_suite(count=args.distinct, seed=args.seed + 1,
+                               size_scale=args.size_scale))
+    rng = np.random.default_rng(args.seed)
+    pop = 1.0 / np.power(1.0 + np.arange(len(pool)), args.zipf_alpha)
+    pop /= pop.sum()
+    stream = rng.choice(len(pool), size=args.requests, p=pop)
+    hot_cut = max(1, len(pool) // 10)  # hottest decile by rank
+
+    # warm-up outside the measured window: compile the featurize→infer jit
+    with PlanRPCClient("127.0.0.1", server.port) as c:
+        for i in range(max(0, args.warmup)):
+            c.plan(pool[i % len(pool)])
+    server.dispatcher.reset_stats()
+
+    # -- drive: bursts fanned over a client-thread pool ----------------------
+    results = []  # (outcome, client_ms, spans_ms, rank)
+    res_lock = threading.Lock()
+    work: "list" = []
+    work_lock = threading.Lock()
+
+    def worker():
+        with PlanRPCClient("127.0.0.1", server.port, timeout=300) as c:
+            while True:
+                with work_lock:
+                    if not work:
+                        return
+                    rank = work.pop()
+                prio = (1 if (args.hot_priority and rank < hot_cut) else 0)
+                t0 = time.perf_counter()
+                try:
+                    r = c.plan_detailed(pool[rank], deadline_ms=deadline_ms,
+                                        priority=prio)
+                    out = ("ok", (time.perf_counter() - t0) * 1e3,
+                           r.get("spans_ms", {}), rank)
+                except DeadlineExceeded:
+                    out = ("shed", (time.perf_counter() - t0) * 1e3, {},
+                           rank)
+                except QueueFull:
+                    out = ("rejected", (time.perf_counter() - t0) * 1e3, {},
+                           rank)
+                except RPCError as exc:
+                    out = ("error", (time.perf_counter() - t0) * 1e3,
+                           {"error": str(exc)}, rank)
+                with res_lock:
+                    results.append(out)
+
+    # queue-depth sampler: polls the server's metrics snapshot so the
+    # report shows backlog behavior over the run, not just the end state
+    depth_samples = []
+    stop_sampling = threading.Event()
+
+    def sampler():
+        with PlanRPCClient("127.0.0.1", server.port) as c:
+            while not stop_sampling.is_set():
+                try:
+                    snap = c.metrics()
+                    depth_samples.append(
+                        float(snap.get("dispatch.queue_depth", 0.0)))
+                except Exception:
+                    pass
+                stop_sampling.wait(0.02)
+
+    t_start = time.perf_counter()
+    mon = threading.Thread(target=sampler, daemon=True)
+    mon.start()
+    idx = 0
+    while idx < len(stream):
+        burst = [int(r) for r in stream[idx : idx + args.burst]]
+        idx += args.burst
+        with work_lock:
+            work.extend(burst)
+        threads = [threading.Thread(target=worker, daemon=True)
+                   for _ in range(min(args.clients, len(burst)))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(600)
+        if idx < len(stream) and args.pause_ms > 0:
+            time.sleep(args.pause_ms / 1e3)
+    wall_s = time.perf_counter() - t_start
+    stop_sampling.set()
+    mon.join(5)
+
+    stats = server.dispatcher.stats()
+    metrics = engine.metrics.snapshot()
+    server.close()
+
+    # -- aggregate ------------------------------------------------------------
+    n = len(results)
+    ok = [r for r in results if r[0] == "ok"]
+    shed = sum(1 for r in results if r[0] == "shed")
+    rejected = sum(1 for r in results if r[0] == "rejected")
+    errors = sum(1 for r in results if r[0] == "error")
+    client_ms = [r[1] for r in ok]
+    stages = sorted({k for r in ok for k in r[2]})
+    per_stage = {
+        st: dict(p50_ms=_pct([r[2][st] for r in ok if st in r[2]], 50),
+                 p99_ms=_pct([r[2][st] for r in ok if st in r[2]], 99),
+                 requests=sum(1 for r in ok if st in r[2]))
+        for st in stages}
+    shed_rate = (shed + rejected) / n if n else 0.0
+
+    report = dict(
+        config=dict(requests=args.requests, distinct=args.distinct,
+                    zipf_alpha=args.zipf_alpha, burst=args.burst,
+                    pause_ms=args.pause_ms, clients=args.clients,
+                    deadline_ms=deadline_ms, max_queue=args.max_queue,
+                    batch=args.batch, max_wait_ms=args.max_wait_ms,
+                    build_workers=args.build_workers, model=args.model,
+                    devices=args.devices, hot_priority=args.hot_priority,
+                    seed=args.seed),
+        traffic=dict(sent=n, ok=len(ok), shed=shed, rejected=rejected,
+                     errors=errors, shed_rate=shed_rate,
+                     wall_s=wall_s,
+                     throughput_rps=(n / wall_s if wall_s else 0.0)),
+        latency=dict(client_p50_ms=_pct(client_ms, 50),
+                     client_p99_ms=_pct(client_ms, 99),
+                     per_stage=per_stage),
+        cache=dict(hit_rate=stats.get("hit_rate"),
+                   hits=stats.get("hits"), misses=stats.get("misses"),
+                   warm_hits=stats.get("warm_hits"),
+                   disk_hits=stats.get("disk_hits")),
+        queue=dict(depth_max=max(depth_samples, default=0.0),
+                   depth_mean=(sum(depth_samples) / len(depth_samples)
+                               if depth_samples else 0.0),
+                   samples=len(depth_samples)),
+        server=dict(stats={k: v for k, v in stats.items()
+                           if isinstance(v, (int, float, str, type(None)))},
+                    metrics=metrics),
+    )
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, default=float)
+
+    print(f"[traffic] {n} requests in {wall_s:.1f} s "
+          f"({report['traffic']['throughput_rps']:.0f} rps): "
+          f"{len(ok)} ok, {shed} shed, {rejected} rejected, "
+          f"{errors} errors (shed rate {shed_rate:.1%})")
+    print(f"[traffic] client latency p50 {_pct(client_ms, 50):.1f} ms, "
+          f"p99 {_pct(client_ms, 99):.1f} ms; queue depth "
+          f"max {report['queue']['depth_max']:.0f}")
+    for st in stages:
+        print(f"[traffic]   stage {st:>8}: "
+              f"p50 {per_stage[st]['p50_ms']:8.2f} ms  "
+              f"p99 {per_stage[st]['p99_ms']:8.2f} ms  "
+              f"({per_stage[st]['requests']} reqs)")
+    print(f"[traffic] cache hit rate {stats.get('hit_rate', 0.0):.2f} "
+          f"({stats.get('warm_hits', 0)} warm submits); wrote {args.out}")
+
+    if errors:
+        print(f"[traffic] FAIL: {errors} unexpected errors")
+        return 1
+    if args.gate_shed_rate is not None and shed_rate > args.gate_shed_rate:
+        print(f"[traffic] FAIL: shed rate {shed_rate:.1%} exceeds gate "
+              f"{args.gate_shed_rate:.1%}")
+        return 1
+    if args.gate_shed_rate is not None:
+        print(f"[traffic] shed-rate gate OK "
+              f"({shed_rate:.1%} ≤ {args.gate_shed_rate:.1%})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,169 @@
+#!/usr/bin/env python
+"""engine status: render a bundle's report card and/or a live server's stats.
+
+    PYTHONPATH=src python scripts/engine_status.py --bundle selector.bundle
+    PYTHONPATH=src python scripts/engine_status.py --host 127.0.0.1 --port 7077
+    PYTHONPATH=src python scripts/engine_status.py --bundle b.bundle --port 7077
+
+Two independent views, composable in one invocation:
+
+* ``--bundle PATH`` — load a :class:`SelectorBundle` (validating it) and
+  render its schema-v2 report card: fingerprint, model/scaler/feature-set
+  names, held-out accuracy, per-algorithm recall, the confusion matrix,
+  and the dataset provenance.
+* ``--host/--port`` — connect a :class:`PlanRPCClient` to a running plan
+  server and print its live ``stats()`` (requests, hit rates, shed /
+  rejected counts, queue depth, latency percentiles) plus the structured
+  metrics snapshot (``--metrics`` for every instrument).
+
+Stdlib + repro only; exits nonzero if a requested view cannot be produced.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _fmt_pct(x) -> str:
+    return "—" if x is None else f"{100.0 * float(x):5.1f}%"
+
+
+def render_bundle(path: str) -> int:
+    from repro.engine.bundle import BundleValidationError, SelectorBundle
+
+    try:
+        b = SelectorBundle.load(path)
+    except (OSError, BundleValidationError) as exc:
+        print(f"[engine-status] cannot load bundle {path!r}: {exc}")
+        return 1
+    print(f"bundle      {path}")
+    print(f"schema      v{b.schema_version}")
+    print(f"fingerprint {b.fingerprint}")
+    print(f"model       {b.model_name}   scaler {b.scaler_name}")
+    print(f"features    {b.feature_set} ({len(list(b.feature_names))} dims)")
+    print(f"algorithms  {', '.join(b.algorithms)}")
+    rc = b.report_card
+    if not rc:
+        print("report card —  (schema v1 bundle, or saved without training)")
+        return 0
+    print(f"report card")
+    print(f"  test accuracy  {_fmt_pct(rc.get('test_accuracy'))}"
+          + (f"   cv score {_fmt_pct(rc.get('cv_score'))}"
+             if rc.get("cv_score") is not None else ""))
+    recall = rc.get("per_algorithm_recall") or {}
+    support = rc.get("test_support") or {}
+    for alg in b.algorithms:
+        if alg in recall:
+            sup = support.get(alg)
+            print(f"  recall {alg:<12} {_fmt_pct(recall[alg])}"
+                  + (f"   (n={sup})" if sup is not None else ""))
+    conf = rc.get("confusion")
+    if conf:
+        width = max(len(a) for a in b.algorithms)
+        head = " ".join(f"{a[:6]:>6}" for a in b.algorithms)
+        print(f"  confusion (rows=true)  {'':<{width}} {head}")
+        for alg, row in zip(b.algorithms, conf):
+            cells = " ".join(f"{int(c):>6}" for c in row)
+            print(f"  {'':<21}  {alg:<{width}} {cells}")
+    prov = b.provenance
+    if prov:
+        print(f"provenance  {prov.get('n_samples')} samples, "
+              f"feature set {prov.get('feature_set')}, "
+              f"dims {prov.get('dim_range')}, nnz {prov.get('nnz_range')}")
+        counts = prov.get("label_counts") or {}
+        if counts:
+            print("  labels      "
+                  + ", ".join(f"{k}: {v}" for k, v in counts.items()))
+    return 0
+
+
+def render_server(host: str, port: int, show_all_metrics: bool) -> int:
+    from repro.launch.rpc import PlanRPCClient
+
+    try:
+        client = PlanRPCClient(host, port, timeout=30, connect_retries=1)
+    except ConnectionError as exc:
+        print(f"[engine-status] cannot reach {host}:{port}: {exc}")
+        return 1
+    with client as c:
+        pong = c.ping()
+        s = c.stats()
+        try:
+            m = c.metrics()
+        except Exception:  # pre-metrics server
+            m = {}
+    print(f"server      {host}:{port}  up {pong.get('uptime_s', 0.0):.0f} s")
+    print(f"fingerprint-versioned cache: "
+          f"{s.get('size', 0)}/{s.get('capacity', 0)} in memory"
+          + (f", {s.get('disk_entries')} on disk"
+             if s.get("disk_entries") is not None else ""))
+    total = s.get("requests", 0)
+    print(f"traffic     {total} requests: {s.get('warm_hits', 0)} warm, "
+          f"{s.get('shed', 0)} shed, {s.get('rejected', 0)} rejected, "
+          f"{s.get('errors', 0)} errors")
+    print(f"cache       hit rate {s.get('hit_rate', 0.0):.2f} "
+          f"({s.get('hits', 0)} hits / {s.get('misses', 0)} misses"
+          + (f", {s.get('disk_hits')} disk" if "disk_hits" in s else "")
+          + ")")
+    if "p50_ms" in s:
+        print(f"latency     p50 {s['p50_ms']:.2f} ms   "
+              f"p99 {s['p99_ms']:.2f} ms   mean {s['mean_ms']:.2f} ms")
+    for stage in ("queue", "select", "build"):
+        k = f"stage_{stage}_p50_ms"
+        if k in s:
+            print(f"  stage {stage:<7} p50 {s[k]:8.2f} ms   "
+                  f"p99 {s[f'stage_{stage}_p99_ms']:8.2f} ms")
+    print(f"queue       depth {s.get('queue_depth', 0)}"
+          + (f" / max_queue {s.get('max_queue')}"
+             if s.get("max_queue") else " (unbounded)")
+          + f", {s.get('inflight_keys', 0)} builds in flight")
+    print(f"cold stages {s.get('select_calls', 0)} select calls "
+          f"({s.get('select_seconds', 0.0) * 1e3:.0f} ms), "
+          f"{s.get('plans_built', 0)} plans built "
+          f"({s.get('build_seconds', 0.0) * 1e3:.0f} ms)")
+    if m and show_all_metrics:
+        print("metrics")
+        for k in sorted(m):
+            v = m[k]
+            print(f"  {k:<32} "
+                  + (f"{v:.4f}" if isinstance(v, float) else str(v)))
+    elif m:
+        interesting = [k for k in sorted(m)
+                       if not k.rsplit(".", 1)[-1] in ("sum", "mean")]
+        shown = ", ".join(f"{k.split('.', 1)[-1]}={m[k]:.0f}"
+                          for k in interesting
+                          if isinstance(m[k], (int, float))
+                          and k.startswith(("rpc.", "dispatch."))
+                          and not k.endswith(("_s.p50", "_s.p99",
+                                              "_s.count")))
+        if shown:
+            print(f"metrics     {shown}  (--metrics for all)")
+    return 0
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(
+        description="Render a SelectorBundle report card and/or a live "
+                    "plan server's stats + metrics.")
+    p.add_argument("--bundle", default=None,
+                   help="path to a SelectorBundle to render")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=None,
+                   help="RPC port of a running plan server")
+    p.add_argument("--metrics", action="store_true",
+                   help="print the full metrics snapshot")
+    args = p.parse_args()
+    if args.bundle is None and args.port is None:
+        p.error("nothing to do: pass --bundle and/or --port")
+    rc = 0
+    if args.bundle:
+        rc |= render_bundle(args.bundle)
+    if args.port is not None:
+        if args.bundle:
+            print()
+        rc |= render_server(args.host, args.port, args.metrics)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,6 +27,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.plan_cache import PlanCache, matrix_fingerprint
+from repro.core.reqctx import RequestContext
 from repro.sparse.csr import CSRMatrix, permute_symmetric
 from repro.sparse.reorder import get_reordering
 from repro.sparse.symbolic import SymbolicFactor, symbolic_cholesky
@@ -75,12 +76,16 @@ class PlanBuilder:
 
     def __init__(self, selector=None, cache: Optional[PlanCache] = None, *,
                  path: str = "device", use_pallas: bool = False,
-                 batch_size: int = 16):
+                 batch_size: int = 16, metrics=None):
         self.selector = selector
         self.cache = cache if cache is not None else PlanCache()
         self.path = path
         self.use_pallas = use_pallas
         self.batch_size = batch_size
+        # optional structured-metrics mirror (repro.core.metrics registry):
+        # mesh featurize→infer work lands under `infer.*` so the serving
+        # stack's one snapshot covers the device stage too
+        self.metrics = metrics
         # stage counters; builds run concurrently in the async server's
         # worker pool, so updates go through _count
         self._stats_lock = threading.Lock()
@@ -104,32 +109,48 @@ class PlanBuilder:
 
     # -- single-matrix ------------------------------------------------------
     def build(self, a: CSRMatrix, algorithm: Optional[str] = None,
-              fingerprint: Optional[str] = None) -> ExecutionPlan:
-        """Build a plan from scratch (no cache involvement)."""
+              fingerprint: Optional[str] = None,
+              ctx: Optional[RequestContext] = None) -> ExecutionPlan:
+        """Build a plan from scratch (no cache involvement). A
+        :class:`RequestContext` gets per-stage spans (``select``,
+        ``reorder``, ``symbolic``) recorded into it."""
         t_sel = 0.0
         if algorithm is None:
             if self.selector is None:
                 raise ValueError("no algorithm given and no selector set")
             algorithm, t_sel = self.selector.select(a)
             self._count(select_calls=1, select_seconds=t_sel)
+            if ctx is not None:
+                ctx.add_span("select", t_sel)
         t0 = time.perf_counter()  # select_seconds and build_seconds are
         perm = get_reordering(algorithm)(a)  # disjoint stages in reports
+        t_reorder = time.perf_counter() - t0
         pa = permute_symmetric(a, perm)
         sym = symbolic_cholesky(pa)
         dt = time.perf_counter() - t0
+        if ctx is not None:
+            ctx.add_span("reorder", t_reorder)
+            ctx.add_span("symbolic", dt - t_reorder)
         self._count(sym_builds=1, plans_built=1, build_seconds=dt)
         return ExecutionPlan(
             fingerprint or matrix_fingerprint(a), algorithm,
             np.asarray(perm, dtype=np.int64), sym, sym.flops,
             meta=dict(t_build=dt, t_select=t_sel))
 
-    def get_or_build(self, a: CSRMatrix) -> Tuple[ExecutionPlan, bool]:
+    def get_or_build(self, a: CSRMatrix,
+                     ctx: Optional[RequestContext] = None
+                     ) -> Tuple[ExecutionPlan, bool]:
         """(plan, was_hit) for one matrix through the cache."""
         key = matrix_fingerprint(a)
-        plan = self.cache.get(key)
+        if ctx is not None:
+            ctx.fingerprint = key
+            with ctx.span("cache"):
+                plan = self.cache.get(key)
+        else:
+            plan = self.cache.get(key)
         if plan is not None:
             return plan, True
-        plan = self.build(a, fingerprint=key)
+        plan = self.build(a, fingerprint=key, ctx=ctx)
         self.cache.put(key, plan)
         return plan, False
 
@@ -154,6 +175,10 @@ class PlanBuilder:
             got, dt = self.selector.select_batch(
                 batch, path=self.path, use_pallas=self.use_pallas)
             self._count(select_calls=1, select_seconds=dt)
+            if self.metrics is not None:
+                self.metrics.counter("infer.batches").inc()
+                self.metrics.counter("infer.matrices").inc(len(chunk))
+                self.metrics.histogram("infer.batch_s").observe(dt)
             for i, name in zip(chunk, got):
                 names[i] = name
         return names  # type: ignore[return-value]
@@ -194,13 +219,16 @@ class PlanBuilder:
 def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
                  b: Optional[np.ndarray] = None, *,
                  solver: str = "multifrontal",
-                 backend: str = "numpy") -> dict:
+                 backend: str = "numpy",
+                 ctx: Optional[RequestContext] = None) -> dict:
     """Numeric factor + solve of ``A x = b`` driven entirely by the plan.
 
     The only structure work left is applying the stored permutation; the
     symbolic factor is consumed as-is by the solver (no ``etree`` /
     ``column_counts`` / pattern recomputation — the warm-path guarantee).
-    Returns the timing/residual dict the benchmarks report.
+    Returns the timing/residual dict the benchmarks report. A
+    :class:`RequestContext` gets ``permute``/``factor``/``solve`` spans —
+    the numeric tail of the same request the planning spine timed.
     """
     assert a.data is not None, "numeric execution needs values"
     if b is None:
@@ -228,6 +256,10 @@ def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
         raise ValueError(f"unknown solver {solver!r}")
     t_sol = time.perf_counter() - t0
 
+    if ctx is not None:
+        ctx.add_span("permute", t_perm)
+        ctx.add_span("factor", t_fac)
+        ctx.add_span("solve", t_sol)
     x = np.empty_like(z)
     x[perm] = z
     resid = float(np.linalg.norm(a.matvec(x) - b)
@@ -235,4 +267,5 @@ def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
     return dict(x=x, time=t_perm + t_fac + t_sol, t_permute=t_perm,
                 t_factor=t_fac, t_solve=t_sol, residual=resid,
                 algorithm=plan.algorithm, solver=solver,
-                nnz_L=plan.nnz_L, flops=plan.predicted_flops)
+                nnz_L=plan.nnz_L, flops=plan.predicted_flops,
+                request_id=None if ctx is None else ctx.request_id)

@@ -63,7 +63,8 @@ class PlanCache:
     lock so it never stalls concurrent warm-path gets.
     """
 
-    def __init__(self, capacity: int = 4096):
+    def __init__(self, capacity: int = 4096, *, metrics=None,
+                 metrics_prefix: str = "cache"):
         assert capacity >= 1
         self.capacity = capacity
         self._store: "OrderedDict[str, Any]" = OrderedDict()
@@ -71,6 +72,17 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # optional structured-metrics mirror: the attribute counters stay
+        # the source of truth for stats() (and the tests that assert on
+        # them); when a repro.core.metrics.MetricsRegistry is supplied,
+        # every count also lands in `<prefix>.*` so the serving stack's
+        # one snapshot sees the cache tier too
+        self._metrics = metrics
+        self._metrics_prefix = metrics_prefix
+
+    def _minc(self, name: str, n: int = 1) -> None:
+        if self._metrics is not None:
+            self._metrics.counter(f"{self._metrics_prefix}.{name}").inc(n)
 
     def __len__(self) -> int:
         with self._lock:
@@ -85,6 +97,7 @@ class PlanCache:
             if key in self._store:
                 self._store.move_to_end(key)
                 self.hits += 1
+                self._minc("memory_hits")
                 return self._store[key]
         # second-tier lookup runs WITHOUT the lock: disk reads must not
         # stall concurrent warm-path gets (no-op for the memory-only cache)
@@ -96,7 +109,9 @@ class PlanCache:
                 self._install_locked(key, plan)
                 return plan
             self.misses += 1
-            return None
+        if plan is None:
+            self._minc("misses")
+        return plan
 
     def peek(self, key: str) -> Optional[Any]:
         """Memory-tier lookup without touching LRU order or counters (used
@@ -121,6 +136,7 @@ class PlanCache:
         while len(self._store) > self.capacity:
             self._store.popitem(last=False)
             self.evictions += 1
+            self._minc("evictions")
 
     # second-tier hooks — no-ops for the memory-only cache ------------------
     def _tier_load(self, key: str) -> Optional[Any]:
@@ -171,8 +187,10 @@ class TwoTierPlanCache(PlanCache):
     def __init__(self, capacity: int = 4096,
                  cache_dir: str = DEFAULT_CACHE_DIR, version: str = "v0",
                  max_disk_bytes: Optional[int] = None,
-                 max_disk_entries: Optional[int] = None):
-        super().__init__(capacity)
+                 max_disk_entries: Optional[int] = None, *,
+                 metrics=None, metrics_prefix: str = "cache"):
+        super().__init__(capacity, metrics=metrics,
+                         metrics_prefix=metrics_prefix)
         self.cache_dir = cache_dir
         # plans persist across process restarts, so they outlive the model
         # that chose them: ``version`` namespaces the disk entries, and a
@@ -231,6 +249,7 @@ class TwoTierPlanCache(PlanCache):
 
     def _tier_hit_locked(self) -> None:
         self.disk_hits += 1
+        self._minc("disk_hits")
 
     def _tier_store(self, key: str, plan: Any) -> None:
         try:
@@ -248,9 +267,11 @@ class TwoTierPlanCache(PlanCache):
             # tier already holds the plan, so serving degrades gracefully
             with self._lock:
                 self.disk_errors += 1
+            self._minc("disk_errors")
             return
         with self._lock:
             self.disk_writes += 1
+        self._minc("disk_writes")
         self._evict_disk()
 
     def _evict_disk(self) -> None:
@@ -335,6 +356,7 @@ class TwoTierPlanCache(PlanCache):
         if evicted:
             with self._lock:
                 self.disk_evictions += evicted
+            self._minc("disk_evictions", evicted)
 
     def _suffix(self) -> str:
         return f".{self.version}.plan.pkl"

@@ -47,6 +47,18 @@ class EngineConfig:
     # async serving
     max_wait_ms: float = 5.0
     build_workers: int = 2
+    # backpressure + deadlines (the RequestContext spine): max_queue=None
+    # keeps the dispatch queue unbounded; setting it makes submit raise a
+    # typed QueueFull once the backlog reaches it. default_deadline_ms
+    # stamps a deadline on requests that arrive without one — expired
+    # requests are shed with DeadlineExceeded at dequeue time instead of
+    # occupying a build worker (warm cache hits still succeed).
+    max_queue: Optional[int] = None
+    default_deadline_ms: Optional[float] = None
+    # structured metrics: every serving layer (dispatch, cache tiers, mesh
+    # inference, RPC) reports into the engine's MetricsRegistry; a path
+    # here additionally streams shed/reject events as JSON lines
+    metrics_jsonl: Optional[str] = None
 
     # RPC front-end (SolverEngine.serve(rpc=True)): bind address. Port 0
     # binds an ephemeral port, published on the returned server object.

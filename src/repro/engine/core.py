@@ -61,6 +61,7 @@ class SolverEngine:
         self._selector = None
         self._fingerprint: Optional[str] = None
         self._builder = None
+        self._metrics = None  # lazily built (sink config lives on config)
         self.last_report: Optional[Dict[str, Any]] = None
         # dataset provenance of the last train() — persisted into bundle
         # schema v2 by save() (None for attach()/load()-built engines)
@@ -143,6 +144,20 @@ class SolverEngine:
             raise EngineError("no fingerprint before training")
         return f"sel-{self._fingerprint[:16]}"
 
+    @property
+    def metrics(self):
+        """The engine's :class:`repro.core.metrics.MetricsRegistry` — one
+        registry per engine, shared by the cache tiers, the plan builder
+        (mesh inference), the dispatcher, and the RPC front-end, so
+        ``metrics.snapshot()`` is the whole serving stack in one dict."""
+        if self._metrics is None:
+            from repro.core.metrics import JSONLSink, MetricsRegistry
+
+            self._metrics = MetricsRegistry()
+            if self.config.metrics_jsonl:
+                self._metrics.add_sink(JSONLSink(self.config.metrics_jsonl))
+        return self._metrics
+
     def _get_builder(self):
         if self._builder is None:
             from repro.core.plan import PlanBuilder
@@ -154,12 +169,14 @@ class SolverEngine:
                     cfg.cache_capacity, cfg.cache_dir,
                     version=self.cache_version,
                     max_disk_bytes=cfg.cache_max_disk_bytes,
-                    max_disk_entries=cfg.cache_max_disk_entries)
+                    max_disk_entries=cfg.cache_max_disk_entries,
+                    metrics=self.metrics)
             else:
-                cache = PlanCache(cfg.cache_capacity)
+                cache = PlanCache(cfg.cache_capacity, metrics=self.metrics)
             self._builder = PlanBuilder(
                 self.selector, cache, path=cfg.path,
-                use_pallas=cfg.use_pallas, batch_size=cfg.batch_size)
+                use_pallas=cfg.use_pallas, batch_size=cfg.batch_size,
+                metrics=self.metrics)
         return self._builder
 
     @property
@@ -181,10 +198,18 @@ class SolverEngine:
         return names
 
     # -- planning ------------------------------------------------------------
-    def plan(self, a):
-        """Cached :class:`ExecutionPlan` for one matrix."""
+    def plan(self, a, ctx=None):
+        """Cached :class:`ExecutionPlan` for one matrix. Mints a
+        :class:`repro.core.reqctx.RequestContext` when the caller did not
+        bring one; either way the context accumulates per-stage spans
+        (cache/select/reorder/symbolic) for this request."""
+        from repro.core.reqctx import RequestContext
+
         self._ensure_serving_mesh()
-        plan, _ = self._get_builder().get_or_build(a)
+        if ctx is None:
+            ctx = RequestContext.mint(
+                deadline_ms=self.config.default_deadline_ms)
+        plan, _ = self._get_builder().get_or_build(a, ctx=ctx)
         return plan
 
     def plan_batch(self, mats: Sequence) -> List:
@@ -193,13 +218,22 @@ class SolverEngine:
         return self._get_builder().plan_batch(mats)
 
     # -- solving -------------------------------------------------------------
-    def solve(self, a, b: Optional[np.ndarray] = None) -> Dict[str, Any]:
+    def solve(self, a, b: Optional[np.ndarray] = None,
+              ctx=None) -> Dict[str, Any]:
         """Plan (cached) + numeric factor + solve; returns the result dict
-        of :func:`repro.core.plan.execute_plan` (x, timings, residual)."""
+        of :func:`repro.core.plan.execute_plan` (x, timings, residual).
+        One :class:`RequestContext` spans planning *and* the numeric tail,
+        so the result carries the request id and ``ctx.spans`` tells the
+        whole story (cache → … → factor → solve)."""
         from repro.core.plan import execute_plan
+        from repro.core.reqctx import RequestContext
 
-        return execute_plan(a, self.plan(a), b, solver=self.config.solver,
-                            backend=self.config.backend)
+        if ctx is None:
+            ctx = RequestContext.mint(
+                deadline_ms=self.config.default_deadline_ms)
+        return execute_plan(a, self.plan(a, ctx=ctx), b,
+                            solver=self.config.solver,
+                            backend=self.config.backend, ctx=ctx)
 
     def solve_batch(self, mats: Sequence,
                     bs: Optional[Sequence[Optional[np.ndarray]]] = None
@@ -249,7 +283,10 @@ class SolverEngine:
         cfg = self.config
         kwargs = dict(batch_size=cfg.batch_size,
                       max_wait_ms=cfg.max_wait_ms,
-                      build_workers=cfg.build_workers)
+                      build_workers=cfg.build_workers,
+                      max_queue=cfg.max_queue,
+                      default_deadline_ms=cfg.default_deadline_ms,
+                      metrics=self.metrics)
         kwargs.update(overrides)
         server = AsyncPlanServer(self._get_builder(), **kwargs)
         if not rpc:

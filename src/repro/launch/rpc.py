@@ -31,7 +31,25 @@ pickles. This is infrastructure RPC, not a public API gateway.
 
 Ops: ``ping`` (liveness + server identity), ``plan`` (one matrix → plan),
 ``plan_batch`` (many), ``select`` (names only, no plan build), ``stats``,
-``shutdown`` (drain and stop the listener).
+``metrics`` (structured-metrics snapshot), ``shutdown`` (drain and stop
+the listener).
+
+**Request identity.** ``plan``/``plan_batch`` requests carry optional
+``request_id`` (``request_ids`` for batches), ``deadline_ms`` and
+``priority`` fields; the server mints a
+:class:`repro.core.reqctx.RequestContext` from them (or from nothing) and
+threads it through the dispatch pipeline, so every response echoes the
+request id and reports ``spans_ms`` — per-stage wall time (queue, select,
+build, cache, …) measured by the layers themselves. Error responses are
+*structured*: ``{ok: False, error, error_type, op, request_id}``, and the
+client re-raises serving errors by type — a shed request raises
+:class:`~repro.core.reqctx.DeadlineExceeded` client-side, a backpressure
+rejection :class:`~repro.core.reqctx.QueueFull`, a shutdown race
+:class:`~repro.core.reqctx.DispatcherClosed`; anything else is an
+:class:`RPCError`. A malformed frame (unpicklable payload, hostile length
+prefix) is answered with a structured error frame before the connection is
+dropped — the stream has no boundary to resync to, but the peer at least
+learns why.
 """
 from __future__ import annotations
 
@@ -46,16 +64,54 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.reqctx import SERVING_ERRORS, RequestContext, ServingError
 from repro.sparse.csr import CSRMatrix
 
-__all__ = ["PlanRPCServer", "PlanRPCClient", "RPCError", "main"]
+__all__ = ["PlanRPCServer", "PlanRPCClient", "RPCError", "error_frame",
+           "raise_from_frame", "main"]
 
 _LEN = struct.Struct(">I")
 MAX_FRAME = 1 << 30  # 1 GiB: rejects garbage/hostile length prefixes
 
 
 class RPCError(RuntimeError):
-    """Server-side failure surfaced to the client (message carried over)."""
+    """Server-side failure surfaced to the client (message carried over).
+
+    ``error_type`` holds the server-side exception class name,
+    ``request_id`` the request the failure belongs to (both may be None
+    for protocol-level failures)."""
+
+    def __init__(self, message: str, *, error_type: Optional[str] = None,
+                 request_id: Optional[str] = None):
+        super().__init__(message)
+        self.error_type = error_type
+        self.request_id = request_id
+
+
+def error_frame(exc_or_msg, *, op: Optional[str] = None,
+                request_id: Optional[str] = None) -> Dict[str, Any]:
+    """Structured error response: always carries op + request id (possibly
+    None) so the client can attribute the failure, and the server-side
+    type name so typed serving errors survive the wire."""
+    if isinstance(exc_or_msg, BaseException):
+        etype = type(exc_or_msg).__name__
+        msg = f"{etype}: {exc_or_msg}"
+    else:
+        etype = "RPCError"
+        msg = str(exc_or_msg)
+    return {"ok": False, "error": msg, "error_type": etype,
+            "op": op, "request_id": request_id}
+
+
+def raise_from_frame(resp: Dict[str, Any]) -> None:
+    """Client side: re-raise a typed serving error by wire name, or an
+    :class:`RPCError` carrying the structured fields."""
+    etype = resp.get("error_type")
+    msg = resp.get("error", "unknown server error")
+    cls = SERVING_ERRORS.get(etype or "")
+    if cls is not None:
+        raise cls(msg)
+    raise RPCError(msg, error_type=etype, request_id=resp.get("request_id"))
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +184,9 @@ class PlanRPCServer:
                  *, own_dispatcher: bool = True, backlog: int = 128):
         self.dispatcher = dispatcher
         self.own_dispatcher = own_dispatcher
+        # the RPC layer reports into the same registry as the dispatch
+        # core it fronts — one snapshot covers transport + pipeline
+        self.metrics = getattr(dispatcher, "metrics", None)
         self._sock = socket.create_server((host, port), backlog=backlog)
         self.host, self.port = self._sock.getsockname()[:2]
         self._closed = threading.Event()
@@ -185,8 +244,18 @@ class PlanRPCServer:
             conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             with self._conns_lock:
                 self._conns.append(conn)
+            if self.metrics is not None:
+                self.metrics.counter("rpc.connections").inc()
             threading.Thread(target=self._serve_conn, args=(conn,),
                              name="rpc-conn", daemon=True).start()
+
+    def _count_request(self) -> None:
+        if self.metrics is not None:
+            self.metrics.counter("rpc.requests").inc()
+
+    def _count_error(self) -> None:
+        if self.metrics is not None:
+            self.metrics.counter("rpc.errors").inc()
 
     def _serve_conn(self, conn: socket.socket) -> None:
         try:
@@ -195,17 +264,28 @@ class PlanRPCServer:
                     req = recv_frame(conn)
                 except (ConnectionError, OSError):
                     return
-                except Exception:
+                except Exception as exc:
                     # non-protocol peer (port scanner, HTTP probe) or a
-                    # corrupt/hostile frame: we cannot answer in-protocol
-                    # (there is no frame boundary to resync to), so drop
-                    # the connection — but never the handler thread
+                    # corrupt/hostile frame: answer with a structured
+                    # error frame so a real-but-buggy client learns *why*,
+                    # then drop the connection — there is no frame
+                    # boundary to resync to, so the stream is unusable
+                    self._count_error()
+                    try:
+                        send_frame(conn, error_frame(
+                            f"malformed frame: {type(exc).__name__}: {exc}"))
+                    except (ConnectionError, OSError):
+                        pass
                     return
+                self._count_request()
                 try:
                     resp = self._handle(req)
                 except Exception as exc:  # never kill the conn on one op
-                    resp = {"ok": False, "error": f"{type(exc).__name__}: "
-                                                  f"{exc}"}
+                    self._count_error()
+                    rid = (req.get("request_id")
+                           if isinstance(req, dict) else None)
+                    op = req.get("op") if isinstance(req, dict) else None
+                    resp = error_frame(exc, op=op, request_id=rid)
                 try:
                     send_frame(conn, resp)
                 except (ConnectionError, OSError):
@@ -227,9 +307,20 @@ class PlanRPCServer:
                 pass
 
     # -- op handlers ---------------------------------------------------------
+    @staticmethod
+    def _mint_ctx(req: Dict[str, Any],
+                  request_id: Optional[str] = None) -> RequestContext:
+        """Context from the wire fields (all optional): ``request_id`` /
+        ``deadline_ms`` / ``priority``. The deadline clock starts *here*,
+        at the serving edge — network transit is the client's budget."""
+        return RequestContext.mint(
+            request_id=request_id or req.get("request_id"),
+            deadline_ms=req.get("deadline_ms"),
+            priority=int(req.get("priority", 0)))
+
     def _handle(self, req: Any) -> Dict[str, Any]:
         if not isinstance(req, dict) or "op" not in req:
-            return {"ok": False, "error": "malformed request (no op)"}
+            return error_frame("malformed request (no op)")
         op = req["op"]
         timeout = float(req.get("timeout", 120.0))
         if op == "ping":
@@ -237,20 +328,57 @@ class PlanRPCServer:
                     "uptime_s": time.time() - self.started_unix}
         if op == "plan":
             mat = matrix_from_wire(req["matrix"])
+            ctx = self._mint_ctx(req)
             t0 = time.perf_counter()
-            plan = self.dispatcher.submit(mat).result(timeout=timeout)
+            try:
+                plan = self.dispatcher.submit(mat, ctx).result(
+                    timeout=timeout)
+            except ServingError as exc:
+                self._count_error()
+                return error_frame(exc, op=op, request_id=ctx.request_id)
             return {"ok": True, "plan": plan,
+                    "request_id": ctx.request_id,
+                    "spans_ms": ctx.spans_ms(),
                     "server_ms": (time.perf_counter() - t0) * 1e3}
         if op == "plan_batch":
             mats = [matrix_from_wire(d) for d in req["matrices"]]
-            plans = self.dispatcher.handle(mats, timeout=timeout)
-            return {"ok": True, "plans": plans}
+            rids = req.get("request_ids") or [None] * len(mats)
+            ctxs = [self._mint_ctx(req, request_id=r) for r in rids]
+            futs, errors = [], {}
+            for i, (m, c) in enumerate(zip(mats, ctxs)):
+                try:
+                    futs.append(self.dispatcher.submit(m, c))
+                except ServingError as exc:
+                    futs.append(None)
+                    errors[i] = exc
+            plans: List[Any] = []
+            for i, f in enumerate(futs):
+                if f is None:
+                    plans.append(None)
+                    continue
+                try:
+                    plans.append(f.result(timeout=timeout))
+                except ServingError as exc:
+                    plans.append(None)
+                    errors[i] = exc
+            if errors:
+                self._count_error()
+            return {"ok": True, "plans": plans,
+                    "request_ids": [c.request_id for c in ctxs],
+                    "spans_ms": [c.spans_ms() for c in ctxs],
+                    "errors": {i: error_frame(e, op=op,
+                                              request_id=ctxs[i].request_id)
+                               for i, e in errors.items()}}
         if op == "select":
             mats = [matrix_from_wire(d) for d in req["matrices"]]
             names = self.dispatcher.builder.select_names(mats)
             return {"ok": True, "algorithms": names}
         if op == "stats":
             return {"ok": True, "stats": self.dispatcher.stats()}
+        if op == "metrics":
+            snap = (self.metrics.snapshot()
+                    if self.metrics is not None else {})
+            return {"ok": True, "metrics": snap}
         if op == "shutdown":
             # teardown is deferred to _serve_conn AFTER the response is
             # sent — closing here would race conn.shutdown() against our
@@ -300,10 +428,14 @@ class PlanRPCClient:
     def _call(self, op: str, **payload) -> Dict[str, Any]:
         payload["op"] = op
         payload.setdefault("timeout", self.timeout)
+        # optional request fields default to absent, not None-on-the-wire
+        for k in ("deadline_ms", "request_id", "request_ids", "priority"):
+            if payload.get(k) is None:
+                payload.pop(k, None)
         send_frame(self._sock, payload)
         resp = recv_frame(self._sock)
         if not resp.get("ok"):
-            raise RPCError(resp.get("error", "unknown server error"))
+            raise_from_frame(resp)
         return resp
 
     def close(self) -> None:
@@ -323,9 +455,28 @@ class PlanRPCClient:
     def ping(self) -> Dict[str, Any]:
         return self._call("ping")
 
-    def plan(self, mat: CSRMatrix):
-        """One matrix → its :class:`ExecutionPlan` (server-cached)."""
-        return self._call("plan", matrix=matrix_to_wire(mat))["plan"]
+    def plan(self, mat: CSRMatrix, *, deadline_ms: Optional[float] = None,
+             priority: Optional[int] = None,
+             request_id: Optional[str] = None):
+        """One matrix → its :class:`ExecutionPlan` (server-cached).
+
+        ``deadline_ms``/``priority``/``request_id`` ride the wire into the
+        server-side :class:`RequestContext`; a shed request raises
+        :class:`~repro.core.reqctx.DeadlineExceeded`, a backpressure
+        rejection :class:`~repro.core.reqctx.QueueFull`."""
+        return self.plan_detailed(mat, deadline_ms=deadline_ms,
+                                  priority=priority,
+                                  request_id=request_id)["plan"]
+
+    def plan_detailed(self, mat: CSRMatrix, *,
+                      deadline_ms: Optional[float] = None,
+                      priority: Optional[int] = None,
+                      request_id: Optional[str] = None) -> Dict[str, Any]:
+        """Full ``plan`` response: plan + ``request_id`` + per-stage
+        ``spans_ms`` + ``server_ms`` (the RequestContext's telemetry)."""
+        return self._call("plan", matrix=matrix_to_wire(mat),
+                          deadline_ms=deadline_ms, priority=priority,
+                          request_id=request_id)
 
     def plan_with_timing(self, mat: CSRMatrix):
         """(plan, server-side milliseconds) — the smoke test uses the
@@ -333,9 +484,32 @@ class PlanRPCClient:
         r = self._call("plan", matrix=matrix_to_wire(mat))
         return r["plan"], r["server_ms"]
 
-    def plan_batch(self, mats: Sequence[CSRMatrix]) -> List:
+    def plan_batch(self, mats: Sequence[CSRMatrix], *,
+                   deadline_ms: Optional[float] = None,
+                   priority: Optional[int] = None) -> List:
+        """Plans for a batch. Raises the first typed serving error if any
+        member was shed/rejected; ``plan_batch_detailed`` returns partial
+        results instead."""
+        r = self.plan_batch_detailed(mats, deadline_ms=deadline_ms,
+                                     priority=priority)
+        errs = r.get("errors") or {}
+        if errs:
+            raise_from_frame(next(iter(errs.values())))
+        return r["plans"]
+
+    def plan_batch_detailed(self, mats: Sequence[CSRMatrix], *,
+                            deadline_ms: Optional[float] = None,
+                            priority: Optional[int] = None,
+                            request_ids: Optional[Sequence[str]] = None
+                            ) -> Dict[str, Any]:
+        """Full ``plan_batch`` response: ``plans`` (None where a member
+        failed), ``request_ids``, per-request ``spans_ms``, and ``errors``
+        (index → structured error frame)."""
         return self._call("plan_batch",
-                          matrices=[matrix_to_wire(m) for m in mats])["plans"]
+                          matrices=[matrix_to_wire(m) for m in mats],
+                          deadline_ms=deadline_ms, priority=priority,
+                          request_ids=(list(request_ids)
+                                       if request_ids else None))
 
     def select(self, mats: Sequence[CSRMatrix]) -> List[str]:
         return self._call("select",
@@ -344,6 +518,11 @@ class PlanRPCClient:
 
     def stats(self) -> Dict[str, Any]:
         return self._call("stats")["stats"]
+
+    def metrics(self) -> Dict[str, Any]:
+        """Structured-metrics snapshot (counters/gauges/histograms) of the
+        server's registry — transport and pipeline in one dict."""
+        return self._call("metrics")["metrics"]
 
     def shutdown(self) -> None:
         self._call("shutdown")

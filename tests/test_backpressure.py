@@ -1,0 +1,287 @@
+"""Backpressure + deadlines on the RequestContext spine.
+
+These tests drive :class:`PlanDispatcher` directly with stub selectors
+whose timing the test controls (an Event-gated selector to hold the
+batcher mid-select, a sleepy selector to burn a deadline between dequeue
+and build), so queue-full rejection, shed-at-dequeue, shed-before-build,
+priority ordering, and close() semantics are all deterministic — no model
+training, no RPC sockets.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core.dispatch import PlanDispatcher
+from repro.core.plan import PlanBuilder
+from repro.core.plan_cache import PlanCache, matrix_fingerprint
+from repro.core.reqctx import (SERVING_ERRORS, DeadlineExceeded,
+                               DispatcherClosed, QueueFull, RequestContext,
+                               ServingError)
+from repro.sparse.dataset import generate_suite
+
+
+@pytest.fixture(scope="module")
+def mats():
+    return list(generate_suite(count=8, seed=3, size_scale=0.25))
+
+
+class _GatedSelector:
+    """Blocks the *first* select_batch until ``release`` is set; records
+    the fingerprint order in which matrices reach selection."""
+
+    def __init__(self):
+        self.entered = threading.Event()
+        self.release = threading.Event()
+        self.order = []
+        self._calls = 0
+
+    def select_batch(self, batch, path="host", use_pallas=False):
+        self._calls += 1
+        self.order.extend(matrix_fingerprint(m) for m in batch)
+        if self._calls == 1:
+            self.entered.set()
+            self.release.wait(30)
+        return ["amd"] * len(batch), 0.0
+
+    def select(self, a):
+        return "amd", 0.0
+
+
+class _SleepySelector:
+    """Every selection takes ``delay`` seconds of wall time."""
+
+    def __init__(self, delay):
+        self.delay = delay
+
+    def select_batch(self, batch, path="host", use_pallas=False):
+        time.sleep(self.delay)
+        return ["amd"] * len(batch), self.delay
+
+    def select(self, a):
+        time.sleep(self.delay)
+        return "amd", self.delay
+
+
+def _dispatcher(selector, **kw):
+    builder = PlanBuilder(selector, PlanCache(64), batch_size=4, path="host")
+    kw.setdefault("batch_size", 1)
+    kw.setdefault("max_wait_ms", 1.0)
+    kw.setdefault("build_workers", 1)
+    return PlanDispatcher(builder, **kw)
+
+
+# ---------------------------------------------------------------------------
+# RequestContext
+# ---------------------------------------------------------------------------
+
+def test_mint_ids_unique_and_deadline_absolute():
+    a = RequestContext.mint()
+    b = RequestContext.mint(deadline_ms=50.0, priority=3)
+    assert a.request_id != b.request_id
+    assert a.deadline_s is None and a.remaining() is None
+    assert not a.expired()
+    assert b.priority == 3
+    assert 0.0 < b.remaining() <= 0.050 + 1e-6
+    assert not b.expired()
+    c = RequestContext.mint(deadline_ms=-1.0)
+    assert c.expired() and c.remaining() < 0
+
+
+def test_spans_accumulate_and_context_manager():
+    ctx = RequestContext.mint()
+    ctx.add_span("select", 0.010)
+    ctx.add_span("select", 0.005)
+    with ctx.span("build"):
+        time.sleep(0.01)
+    assert ctx.spans["select"] == pytest.approx(0.015)
+    assert ctx.spans["build"] >= 0.01
+    ms = ctx.spans_ms()
+    assert ms["select"] == pytest.approx(15.0)
+    # span() records even when the body raises — the time was still spent
+    with pytest.raises(ValueError):
+        with ctx.span("factor"):
+            raise ValueError("boom")
+    assert "factor" in ctx.spans
+
+
+def test_context_pickles_without_lock():
+    import pickle
+
+    ctx = RequestContext.mint(deadline_ms=100.0)
+    ctx.add_span("cache", 0.001)
+    back = pickle.loads(pickle.dumps(ctx))
+    assert back.request_id == ctx.request_id
+    assert back.spans == ctx.spans
+    back.add_span("cache", 0.001)  # fresh lock works after unpickling
+
+
+def test_serving_error_taxonomy():
+    for cls in (DeadlineExceeded, QueueFull, DispatcherClosed):
+        assert issubclass(cls, ServingError)
+        assert issubclass(cls, RuntimeError)
+        assert SERVING_ERRORS[cls.__name__] is cls
+
+
+# ---------------------------------------------------------------------------
+# admission control: queue-full rejection
+# ---------------------------------------------------------------------------
+
+def test_queue_full_rejects_submit(mats):
+    sel = _GatedSelector()
+    d = _dispatcher(sel, max_queue=2)
+    try:
+        blocker = d.submit(mats[0])       # taken by the batcher, held in
+        assert sel.entered.wait(30)       # select by the gate
+        q1 = d.submit(mats[1])
+        q2 = d.submit(mats[2])            # queue now at max_queue
+        with pytest.raises(QueueFull):
+            d.submit(mats[3])
+        assert d.stats()["rejected"] == 1
+        sel.release.set()
+        for f in (blocker, q1, q2):
+            assert f.result(timeout=60).algorithm == "amd"
+    finally:
+        sel.release.set()
+        d.close()
+
+
+# ---------------------------------------------------------------------------
+# deadline shedding
+# ---------------------------------------------------------------------------
+
+def test_expired_at_submit_fails_fast(mats):
+    d = _dispatcher(_SleepySelector(0.0))
+    try:
+        fut = d.submit(mats[0], RequestContext.mint(deadline_ms=-1.0))
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=10)
+        assert d.builder.plans_built == 0     # never reached a build worker
+        assert d.stats()["shed"] == 1
+    finally:
+        d.close()
+
+
+def test_shed_at_dequeue_spends_nothing(mats):
+    """A request whose deadline passes while it waits in the queue is shed
+    by the batcher — the selector never even sees its matrix."""
+    sel = _GatedSelector()
+    d = _dispatcher(sel)
+    try:
+        blocker = d.submit(mats[0])
+        assert sel.entered.wait(30)
+        doomed = d.submit(mats[1], RequestContext.mint(deadline_ms=30.0))
+        time.sleep(0.1)                   # deadline passes in the queue
+        sel.release.set()
+        with pytest.raises(DeadlineExceeded):
+            doomed.result(timeout=60)
+        assert blocker.result(timeout=60).algorithm == "amd"
+        assert matrix_fingerprint(mats[1]) not in sel.order
+        assert d.builder.plans_built == 1  # only the blocker was built
+    finally:
+        sel.release.set()
+        d.close()
+
+
+def test_shed_before_build_never_occupies_worker(mats):
+    """Deadline expires between dequeue and build (selection took too
+    long): the build worker prunes the waiter and skips the build."""
+    d = _dispatcher(_SleepySelector(0.15))
+    try:
+        fut = d.submit(mats[0], RequestContext.mint(deadline_ms=50.0))
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=60)
+        assert d.builder.plans_built == 0
+        assert d.builder.select_calls == 1    # selection ran, build didn't
+    finally:
+        d.close()
+
+
+def test_warm_hit_served_despite_expired_deadline(mats):
+    d = _dispatcher(_SleepySelector(0.0))
+    try:
+        d.submit(mats[0]).result(timeout=60)  # populate the cache
+        ctx = RequestContext.mint(deadline_ms=-1.0)
+        fut = d.submit(mats[0], ctx)
+        assert fut.result(timeout=10).algorithm == "amd"
+        assert set(ctx.spans) == {"cache", "total"}  # never queued
+        assert fut.ctx is ctx
+        assert d.stats()["warm_hits"] == 1 and d.stats()["shed"] == 0
+    finally:
+        d.close()
+
+
+# ---------------------------------------------------------------------------
+# priority ordering
+# ---------------------------------------------------------------------------
+
+def test_priority_order_under_load(mats):
+    """With the batcher held, queued requests drain highest-priority
+    first (FIFO within a priority)."""
+    sel = _GatedSelector()
+    d = _dispatcher(sel)
+    try:
+        blocker = d.submit(mats[0])
+        assert sel.entered.wait(30)
+        futs = [d.submit(mats[i], RequestContext.mint(priority=p))
+                for i, p in ((1, 0), (2, 5), (3, 2), (4, 5))]
+        sel.release.set()
+        for f in [blocker] + futs:
+            f.result(timeout=60)
+        # arrival order 1,2,3,4 with priorities 0,5,2,5 → served 2,4,3,1
+        want = [matrix_fingerprint(mats[i]) for i in (0, 2, 4, 3, 1)]
+        assert sel.order == want
+    finally:
+        sel.release.set()
+        d.close()
+
+
+# ---------------------------------------------------------------------------
+# close(): typed failure, never a hung future
+# ---------------------------------------------------------------------------
+
+def test_close_fails_pending_with_dispatcher_closed(mats):
+    sel = _GatedSelector()
+    d = _dispatcher(sel)
+    blocker = d.submit(mats[0])
+    assert sel.entered.wait(30)
+    q1 = d.submit(mats[1])
+    q2 = d.submit(mats[2])
+    closer = threading.Thread(target=d.close, kwargs=dict(timeout=60))
+    closer.start()
+    # queued requests are failed immediately, even while the batcher is
+    # still wedged in selection
+    with pytest.raises(DispatcherClosed):
+        q1.result(timeout=30)
+    with pytest.raises(DispatcherClosed):
+        q2.result(timeout=30)
+    sel.release.set()
+    closer.join(60)
+    assert not closer.is_alive()
+    # the in-flight request was already past the queue: it completes
+    assert blocker.result(timeout=10).algorithm == "amd"
+    with pytest.raises(DispatcherClosed):
+        d.submit(mats[3])
+    assert d.stats()["closed_rejects"] >= 3
+    d.close()  # idempotent
+
+
+def test_handle_round_trip_and_stats_shape(mats):
+    d = _dispatcher(_SleepySelector(0.0), batch_size=4, max_wait_ms=2.0)
+    try:
+        plans = d.handle(mats[:4] + [mats[0]], timeout=60)
+        assert [p.fingerprint for p in plans] == \
+            [matrix_fingerprint(m) for m in mats[:4] + [mats[0]]]
+        s = d.stats()
+        assert s["requests"] == 5
+        assert s["p99_ms"] >= s["p50_ms"] >= 0.0
+        assert s["max_queue"] is None and s["queue_depth"] == 0
+        assert "stage_queue_p50_ms" in s and "stage_build_p50_ms" in s
+        snap = d.metrics.snapshot()
+        assert snap["dispatch.requests"] == 5
+        assert snap["dispatch.latency_s.count"] == 5
+        d.reset_stats()
+        assert d.stats()["requests"] == 0
+        assert d.metrics.snapshot()["dispatch.latency_s.count"] == 0
+    finally:
+        d.close()

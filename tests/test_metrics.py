@@ -1,0 +1,162 @@
+"""Metrics registry: instruments, sinks, snapshots, thread-safety."""
+import json
+import threading
+
+import pytest
+
+from repro.core.metrics import (Counter, Gauge, Histogram, JSONLSink,
+                                ListSink, MetricsRegistry, default_registry)
+
+
+# ---------------------------------------------------------------------------
+# instruments
+# ---------------------------------------------------------------------------
+
+def test_counter_basics():
+    c = Counter("x")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    c.reset()
+    assert c.value == 0
+
+
+def test_gauge_basics():
+    g = Gauge("depth")
+    g.set(7)
+    g.inc(2)
+    g.dec(1)
+    assert g.value == 8
+    g.reset()
+    assert g.value == 0.0
+
+
+def test_histogram_percentiles_nearest_rank():
+    h = Histogram("lat")
+    for v in range(1, 101):
+        h.observe(float(v))
+    assert h.count == 100
+    assert h.sum == pytest.approx(5050.0)
+    s = h.summary()
+    assert s["p50"] == 51.0  # nearest rank on the sorted window
+    assert s["p99"] == 99.0
+    assert s["mean"] == pytest.approx(50.5)
+    assert h.percentile(0) == 1.0 and h.percentile(100) == 100.0
+
+
+def test_histogram_window_bounds_memory_not_count():
+    h = Histogram("lat", window=10)
+    for v in range(100):
+        h.observe(float(v))
+    assert h.count == 100          # lifetime total survives
+    assert h.values() == [float(v) for v in range(90, 100)]
+    assert h.percentile(0) == 90.0  # percentiles describe the window
+
+
+def test_histogram_empty_is_zero():
+    h = Histogram("lat")
+    assert h.percentile(50) == 0.0
+    assert h.summary() == dict(count=0, sum=0.0, p50=0.0, p99=0.0, mean=0.0)
+
+
+def test_counter_thread_safety():
+    c = Counter("x")
+
+    def worker():
+        for _ in range(1000):
+            c.inc()
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == 8000
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_get_or_create_and_snapshot():
+    r = MetricsRegistry()
+    assert r.counter("a") is r.counter("a")
+    assert r.gauge("g") is r.gauge("g")
+    assert r.histogram("h") is r.histogram("h")
+    r.counter("a").inc(3)
+    r.gauge("g").set(2.5)
+    r.histogram("h").observe(0.1)
+    snap = r.snapshot()
+    assert snap["a"] == 3 and snap["g"] == 2.5
+    assert snap["h.count"] == 1 and snap["h.p50"] == pytest.approx(0.1)
+    r.reset()
+    snap = r.snapshot()
+    assert snap["a"] == 0 and snap["h.count"] == 0
+
+
+def test_registry_concurrent_get_or_create_and_update():
+    """Many threads racing get-or-create + update on the same names end
+    with exact totals — the failure mode would be two instruments under
+    one name, silently splitting the counts."""
+    r = MetricsRegistry()
+
+    def worker():
+        for _ in range(500):
+            r.counter("req").inc()
+            r.histogram("lat").observe(1.0)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = r.snapshot()
+    assert snap["req"] == 4000
+    assert snap["lat.count"] == 4000
+
+
+def test_default_registry_is_shared():
+    assert default_registry() is default_registry()
+
+
+# ---------------------------------------------------------------------------
+# sinks — the push channel
+# ---------------------------------------------------------------------------
+
+def test_emit_fans_out_and_stamps_records():
+    r = MetricsRegistry()
+    sink = r.add_sink(ListSink())
+    r.emit("dispatch.shed", request_id="req-1", late_by_ms=12.5)
+    assert len(sink) == 1
+    rec = sink.records[0]
+    assert rec["event"] == "dispatch.shed"
+    assert rec["request_id"] == "req-1" and rec["late_by_ms"] == 12.5
+    assert rec["t_unix"] > 0
+    r.remove_sink(sink)
+    r.emit("dispatch.shed", request_id="req-2")
+    assert len(sink) == 1  # removed sinks see nothing
+
+
+def test_failing_sink_never_fails_the_emitter():
+    class _Boom(ListSink):
+        def emit(self, record):
+            raise OSError("disk full")
+
+    r = MetricsRegistry()
+    r.add_sink(_Boom())
+    good = r.add_sink(ListSink())
+    r.emit("x")  # must not raise
+    assert len(good) == 1  # siblings still receive the record
+
+
+def test_jsonl_sink_appends_parseable_lines(tmp_path):
+    path = str(tmp_path / "events" / "metrics.jsonl")
+    r = MetricsRegistry()
+    r.add_sink(JSONLSink(path))
+    r.emit("dispatch.reject", depth=3)
+    r.emit("dispatch.shed", request_id="req-9")
+    r.close()
+    lines = [json.loads(l) for l in open(path, encoding="utf-8")]
+    assert [l["event"] for l in lines] == ["dispatch.reject",
+                                          "dispatch.shed"]
+    assert lines[0]["depth"] == 3 and lines[1]["request_id"] == "req-9"

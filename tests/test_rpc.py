@@ -22,10 +22,11 @@ from repro.core.ml import RandomForestClassifier
 from repro.core.scaling import SCALERS
 from repro.core.selector import ReorderSelector
 from repro.engine import EngineConfig, SolverEngine
+from repro.core.reqctx import SERVING_ERRORS, DeadlineExceeded
 from repro.launch.rpc import (PlanRPCClient, PlanRPCServer, RPCError,
-                              matrix_from_wire, matrix_to_wire, recv_frame,
-                              send_frame)
-from repro.sparse.dataset import generate_suite
+                              error_frame, matrix_from_wire, matrix_to_wire,
+                              raise_from_frame, recv_frame, send_frame)
+from repro.sparse.dataset import generate_suite, grid2d
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -155,21 +156,31 @@ def test_shutdown_op_acks_before_teardown(engine):
 
 
 def test_garbage_frames_do_not_kill_server(server, mats):
-    """Non-protocol peers (scanners, HTTP probes, corrupt frames) get
-    dropped; the server keeps serving real clients."""
+    """Non-protocol peers (scanners, corrupt frames) get a structured
+    error frame explaining why, then the connection is dropped; the
+    server keeps serving real clients."""
     import struct
 
-    # oversized length prefix
+    # oversized length prefix (only the prefix — no trailing bytes, so
+    # the server-side close is clean and the error frame is readable)
     s1 = socket.create_connection((server.host, server.port), timeout=10)
-    s1.sendall(struct.pack(">I", (1 << 30) + 1) + b"xx")
+    s1.sendall(struct.pack(">I", (1 << 30) + 1))
     # valid length, garbage (unpicklable) payload
     s2 = socket.create_connection((server.host, server.port), timeout=10)
     s2.sendall(struct.pack(">I", 4) + b"\x00\x01\x02\x03")
-    for s in (s1, s2):  # both connections get closed server-side
+    for s in (s1, s2):
         try:
-            assert s.recv(1) == b""  # clean EOF …
-        except OSError:
-            pass  # … or RST (unread bytes pending at close) — both fine
+            resp = recv_frame(s)
+        except (ConnectionError, OSError, RPCError):
+            pass  # reset before the frame landed — dropped is dropped
+        else:
+            assert not resp["ok"] and "malformed frame" in resp["error"]
+            # …then the connection is closed: there is no frame boundary
+            # to resync to after a corrupt frame
+            try:
+                assert s.recv(1) == b""
+            except OSError:
+                pass
         s.close()
     with PlanRPCClient(server.host, server.port) as c:  # still serving
         assert c.ping()["ok"]
@@ -216,3 +227,125 @@ def test_cold_and_warm_from_separate_process(server, mats):
                        capture_output=True, text=True, timeout=420, env=env)
     assert r.returncode == 0, r.stdout + "\n" + r.stderr
     assert "PROC-RPC-OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# the RequestContext spine over the wire
+# ---------------------------------------------------------------------------
+
+def test_error_frames_round_trip_typed_errors():
+    """Every typed serving error survives the wire by name; anything else
+    degrades to an RPCError that still carries the structured fields."""
+    for name, cls in SERVING_ERRORS.items():
+        frame = error_frame(cls("boom"), op="plan", request_id="r1")
+        assert frame["error_type"] == name
+        assert frame["op"] == "plan" and frame["request_id"] == "r1"
+        with pytest.raises(cls, match="boom"):
+            raise_from_frame(frame)
+    with pytest.raises(RPCError) as ei:
+        raise_from_frame(error_frame(ValueError("nope"), op="plan",
+                                     request_id="r2"))
+    assert ei.value.error_type == "ValueError"
+    assert ei.value.request_id == "r2"
+
+
+def test_request_identity_and_spans_round_trip(server):
+    cold = grid2d(12, 12, "wire-ident")  # structure no other test plans
+    with PlanRPCClient(server.host, server.port) as c:
+        resp = c.plan_detailed(cold, request_id="req-wire-42",
+                               deadline_ms=60_000, priority=2)
+        assert resp["ok"] and resp["request_id"] == "req-wire-42"
+        # one context accumulated the whole cold path, stage by stage
+        assert {"queue", "select", "build", "cache",
+                "total"} <= set(resp["spans_ms"])
+        assert resp["server_ms"] > 0
+        warm = c.plan_detailed(cold)
+        assert warm["request_id"].startswith("req-")  # server-minted
+        assert set(warm["spans_ms"]) == {"cache", "total"}  # never queued
+
+
+def test_deadline_shed_typed_over_wire(server):
+    """A deadline below cold-path latency sheds with a typed error; the
+    connection survives, and a warm hit succeeds even with zero budget."""
+    cold = grid2d(13, 13, "wire-deadline")
+    with PlanRPCClient(server.host, server.port) as c:
+        with pytest.raises(DeadlineExceeded):
+            c.plan(cold, deadline_ms=0)
+        p = c.plan(cold)  # no deadline: builds fine on the same socket
+        p2 = c.plan(cold, deadline_ms=0)  # warm: served despite the budget
+        assert np.array_equal(p.perm, p2.perm)
+        assert c.stats()["shed"] >= 1
+
+
+def test_plan_batch_partial_errors(server, mats):
+    cold = grid2d(14, 14, "wire-batch")
+    with PlanRPCClient(server.host, server.port) as c:
+        c.plan(mats[0])  # ensure one member is warm
+        resp = c.plan_batch_detailed([mats[0], cold], deadline_ms=0)
+        assert resp["ok"]
+        assert resp["plans"][0] is not None  # warm member served
+        assert resp["plans"][1] is None      # cold member shed
+        err = resp["errors"][1]
+        assert err["error_type"] == "DeadlineExceeded"
+        assert err["request_id"] == resp["request_ids"][1]
+        # the convenience wrapper re-raises the first typed error
+        with pytest.raises(DeadlineExceeded):
+            c.plan_batch([mats[0], cold], deadline_ms=0)
+
+
+def test_metrics_consistent_across_client_processes(engine):
+    """Fork-based consistency check: several client *processes* hammer one
+    server concurrently (each RPC connection gets its own handler thread);
+    afterwards the metrics registry must account for every request exactly
+    — racing threads splitting or dropping counts would show up here."""
+    from repro.core.plan_cache import matrix_fingerprint
+
+    srv = engine.serve(rpc=True, port=0)
+    try:
+        srv.dispatcher.reset_stats()
+        n_procs, n_mats = 3, 4
+        # the module-scoped engine may have planned some of the child
+        # suite already — only structures absent from the cache build
+        child_mats = list(generate_suite(count=n_mats, seed=77,
+                                         size_scale=0.25))
+        expect_cold = sum(
+            srv.dispatcher.cache.peek(matrix_fingerprint(m)) is None
+            for m in child_mats)
+        child = textwrap.dedent("""
+            import sys
+            from repro.launch.rpc import PlanRPCClient
+            from repro.sparse.dataset import generate_suite, grid2d
+            mats = list(generate_suite(count=4, seed=77, size_scale=0.25))
+            with PlanRPCClient("127.0.0.1", int(sys.argv[1]),
+                               timeout=120) as c:
+                for m in mats:
+                    assert c.plan(m).algorithm in ("amd", "rcm")
+            print("CHILD-OK")
+        """)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        procs = [subprocess.Popen([sys.executable, "-c", child,
+                                   str(srv.port)],
+                                  stdout=subprocess.PIPE,
+                                  stderr=subprocess.PIPE, text=True, env=env)
+                 for _ in range(n_procs)]
+        for p in procs:
+            out, err = p.communicate(timeout=420)
+            assert p.returncode == 0, out + "\n" + err
+            assert "CHILD-OK" in out
+        with PlanRPCClient(srv.host, srv.port) as c:
+            m = c.metrics()
+            s = c.stats()
+        total = n_procs * n_mats
+        assert m["dispatch.requests"] == total
+        assert m["dispatch.latency_s.count"] == total
+        # every submit either hit or missed the memory tier — no request
+        # vanished between the RPC threads and the cache counters
+        assert m["cache.memory_hits"] + m["cache.misses"] == total
+        # distinct cold structures are built exactly once (in-flight
+        # dedup); already-cached ones are warm hits, not rebuilds
+        assert s["plans_built"] == expect_cold
+        assert m["rpc.requests"] >= total
+        assert m["rpc.connections"] >= n_procs
+    finally:
+        srv.close()
