@@ -1,93 +1,72 @@
-"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+"""Roofline view of the numeric solve, from ``BENCH_solve.json`` records.
 
-Per (arch × shape × mesh): the three terms in seconds
-    compute    = per-device dot FLOPs / 197 TFLOP/s
-    memory     = per-device HBM bytes / 819 GB/s
-    collective = per-device wire bytes / 50 GB/s/link
-dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, and
-per-device residency (the fits-in-HBM proof)."""
+Per matrix: the two roofline terms of the dense-front work
+    compute = front FLOPs / PEAK_FLOPS
+    memory  = front workspace bytes / HBM_BW
+(recomputed here from the raw fields so the peak constants can evolve
+without re-running the bench), the dominant bottleneck, and per backend the
+achieved GFLOP/s and its fraction of the compute roof. Run
+``benchmarks/solve_bench.py`` first to produce the input; this is a pure
+formatter of its records.
+"""
 from __future__ import annotations
 
-import glob
 import json
 import os
-
-ART = os.environ.get("REPRO_ARTIFACTS", "artifacts")
-
-
-def load_records(mesh="pod16x16", tag=None):
-    recs = []
-    for p in sorted(glob.glob(os.path.join(ART, "dryrun", mesh, "*.json"))):
-        name = os.path.basename(p)[:-5]
-        parts = name.split("__")
-        if tag is None and len(parts) > 2:
-            continue
-        if tag is not None and (len(parts) < 3 or parts[2] != tag):
-            continue
-        with open(p) as f:
-            recs.append(json.load(f))
-    return recs
-
+import sys
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
-ICI_BW = 50e9
+
+DEFAULT_PATH = os.environ.get("REPRO_BENCH_SOLVE", "BENCH_solve.json")
 
 
-def terms_of(r):
-    """Recompute roofline terms from per-device artifact fields (so metric
-    definitions can evolve without re-running the 80-cell sweep)."""
-    pd = r["per_device"]
-    compute = pd["dot_flops"] / PEAK_FLOPS
-    memory = pd.get("dot_bytes", pd.get("bytes", 0.0)) / HBM_BW
-    collective = pd["collective_bytes"] / ICI_BW
-    terms = dict(compute_s=compute, memory_s=memory, collective_s=collective)
-    bottleneck = max(terms, key=terms.get)
-    return terms, bottleneck
+def load(path: str = DEFAULT_PATH) -> dict:
+    with open(path) as fh:
+        return json.load(fh)
 
 
-def fmt_row(r):
-    if r.get("status") != "ok":
-        status = r.get("status", "?")
-        short = "SKIP (full attention)" if "skipped" in status else status[:40]
-        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | "
-                f"{short} |")
-    t, dom = terms_of(r)
-    ratio = r["roofline"]["useful_flops_ratio"]
-    res = r["resident_bytes"] / 1e9
-    return (f"| {r['arch']} | {r['shape']} | {t['compute_s']*1e3:.2f} | "
-            f"{t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} | "
-            f"**{dom.replace('_s', '')}** | {ratio:.3f} | {res:.1f} | ok |")
+def terms_of(rec: dict):
+    compute = rec["front_flops"] / PEAK_FLOPS
+    memory = rec["roofline"]["front_bytes"] / HBM_BW
+    terms = dict(compute_s=compute, memory_s=memory)
+    return terms, max(terms, key=terms.get)
 
 
-def main(mesh: str = "pod16x16") -> str:
-    recs = load_records(mesh)
-    lines = [
-        f"### Roofline — mesh {mesh} (ms per step; per-device terms)",
-        "",
-        "| arch | shape | compute ms | memory ms | collective ms | "
-        "bottleneck | MODEL/HLO flops | GB/dev | status |",
-        "|---|---|---|---|---|---|---|---|---|",
-    ]
-    for r in recs:
-        lines.append(fmt_row(r))
-    # aggregate: worst usefulness, most collective-bound
-    ok = [r for r in recs if r.get("status") == "ok"]
-    if ok:
-        worst = min(ok, key=lambda r: r["roofline"]["useful_flops_ratio"])
-        coll = max(ok, key=lambda r: (terms_of(r)[0]["collective_s"]
-                                      / max(max(terms_of(r)[0]["compute_s"],
-                                                terms_of(r)[0]["memory_s"]),
-                                            1e-12)))
-        lines.append("")
-        lines.append(f"worst useful-FLOPs ratio: {worst['arch']}×"
-                     f"{worst['shape']} "
-                     f"({worst['roofline']['useful_flops_ratio']:.3f}); "
-                     f"most collective-bound: {coll['arch']}×{coll['shape']}")
-    return "\n".join(lines)
+def fmt_row(rec: dict, backends) -> str:
+    t, dom = terms_of(rec)
+    cells = [f"| {rec['name']} | {rec['n']} | {t['compute_s']*1e6:.2f} | "
+             f"{t['memory_s']*1e6:.2f} | **{dom.replace('_s', '')}** | "
+             f"{rec['flop_ratio']:.2f} | {rec['occupancy']:.2f} "]
+    for be in backends:
+        e = rec["backends"].get(be)
+        if e is None:
+            cells.append("| — ")
+            continue
+        frac = e["gflops"] * 1e9 / PEAK_FLOPS
+        cells.append(f"| {e['gflops']:.3f} ({frac*100:.2g}%) ")
+    return "".join(cells) + "|"
+
+
+def main(path: str = DEFAULT_PATH) -> str:
+    doc = load(path)
+    backends = doc.get("backends", [])
+    head = ["### Solve roofline — front work terms (µs) + achieved GFLOP/s",
+            "",
+            "| matrix | n | compute µs | memory µs | bottleneck | "
+            "flops/symbolic | occupancy | "
+            + " | ".join(f"{b} GF/s (of peak)" for b in backends) + " |",
+            "|---" * (7 + len(backends)) + "|"]
+    rows = [fmt_row(r, backends) for r in doc["records"]]
+    recs = doc["records"]
+    best = max(recs, key=lambda r: max(e["gflops"]
+                                       for e in r["backends"].values()))
+    tail = ["",
+            f"peak achieved: {best['name']} "
+            f"({max(e['gflops'] for e in best['backends'].values()):.3f} "
+            f"GFLOP/s); all records from {path}"]
+    return "\n".join(head + rows + tail)
 
 
 if __name__ == "__main__":
-    print(main())
-    print()
-    print(main("pod2x16x16"))
+    print(main(sys.argv[1] if len(sys.argv) > 1 else DEFAULT_PATH))

@@ -220,17 +220,28 @@ def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
                  b: Optional[np.ndarray] = None, *,
                  solver: str = "multifrontal",
                  backend: str = "numpy",
+                 solve_dtype: str = "fp64",
                  ctx: Optional[RequestContext] = None) -> dict:
     """Numeric factor + solve of ``A x = b`` driven entirely by the plan.
 
     The only structure work left is applying the stored permutation; the
     symbolic factor is consumed as-is by the solver (no ``etree`` /
     ``column_counts`` / pattern recomputation — the warm-path guarantee).
+    ``backend`` picks the front-math substrate (``numpy`` / per-front
+    ``pallas`` / level-scheduled ``batched``) and ``solve_dtype`` the
+    precision mode: ``fp64``, ``fp32``, or ``fp32_refine`` (fp32
+    factorization + fp64 iterative refinement). The f32-only ``batched`` /
+    ``pallas`` backends auto-promote ``fp64`` to ``fp32_refine`` so the
+    residual still reaches the fp64 floor. The effective backend/precision
+    are recorded both in the result dict and in ``plan.meta`` — a cached
+    plan always tells which numeric path last produced results from it.
     Returns the timing/residual dict the benchmarks report. A
     :class:`RequestContext` gets ``permute``/``factor``/``solve`` spans —
     the numeric tail of the same request the planning spine timed.
     """
     assert a.data is not None, "numeric execution needs values"
+    if solve_dtype not in ("fp64", "fp32", "fp32_refine"):
+        raise ValueError(f"unknown solve_dtype {solve_dtype!r}")
     if b is None:
         b = np.random.default_rng(0).standard_normal(a.n)
     perm = plan.perm
@@ -238,16 +249,29 @@ def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
     pa = permute_symmetric(a, perm)
     t_perm = time.perf_counter() - t0
 
+    refine_info = None
+    eff_dtype = solve_dtype
     t0 = time.perf_counter()
     if solver == "multifrontal":
         from repro.sparse.multifrontal import (multifrontal_cholesky,
                                                multifrontal_solve)
-        f = multifrontal_cholesky(pa, sym=plan.sym, backend=backend)
+        if backend in ("pallas", "batched") and solve_dtype == "fp64":
+            eff_dtype = "fp32_refine"  # these backends factor in f32
+        dtype = np.float64 if eff_dtype == "fp64" else np.float32
+        f = multifrontal_cholesky(pa, sym=plan.sym, backend=backend,
+                                  dtype=dtype)
         t_fac = time.perf_counter() - t0
         t0 = time.perf_counter()
-        z = multifrontal_solve(f, b[perm])
+        pb = b[perm]
+        if eff_dtype == "fp32_refine":
+            from repro.sparse.refine import refine_solve
+            z, refine_info = refine_solve(
+                pa.matvec, lambda r: multifrontal_solve(f, r), pb)
+        else:
+            z = multifrontal_solve(f, pb)
     elif solver == "simplicial":
         from repro.sparse.numeric import cholesky_solve, sparse_cholesky
+        eff_dtype = "fp64"  # simplicial path is host fp64 only
         f = sparse_cholesky(pa, sym=plan.sym)
         t_fac = time.perf_counter() - t0
         t0 = time.perf_counter()
@@ -264,8 +288,15 @@ def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
     x[perm] = z
     resid = float(np.linalg.norm(a.matvec(x) - b)
                   / max(np.linalg.norm(b), 1e-30))
+    plan.meta["solve_backend"] = backend
+    plan.meta["solve_dtype"] = eff_dtype
     return dict(x=x, time=t_perm + t_fac + t_sol, t_permute=t_perm,
                 t_factor=t_fac, t_solve=t_sol, residual=resid,
                 algorithm=plan.algorithm, solver=solver,
+                backend=backend, solve_dtype=eff_dtype,
+                refine_iterations=(None if refine_info is None
+                                   else refine_info.iterations),
+                refine_converged=(None if refine_info is None
+                                  else refine_info.converged),
                 nnz_L=plan.nnz_L, flops=plan.predicted_flops,
                 request_id=None if ctx is None else ctx.request_id)

@@ -65,9 +65,15 @@ class EngineConfig:
     rpc_host: str = "127.0.0.1"
     rpc_port: int = 0
 
-    # numeric solve
+    # numeric solve: backend picks the front-math substrate ("numpy" host
+    # BLAS, "pallas" per-front kernels, "batched" level-scheduled batched
+    # kernels — see repro.sparse.schedule); solve_dtype picks the precision
+    # mode ("fp64", "fp32", or "fp32_refine" = fp32 factorization + fp64
+    # iterative refinement; the f32-only pallas/batched backends promote
+    # "fp64" to "fp32_refine" automatically)
     solver: str = "multifrontal"  # or "simplicial"
     backend: str = "numpy"
+    solve_dtype: str = "fp64"
 
     # training
     fast_grids: bool = False
@@ -79,3 +85,9 @@ class EngineConfig:
         if self.path not in ("host", "device"):
             raise ValueError(f"path must be 'host' or 'device', "
                              f"got {self.path!r}")
+        if self.backend not in ("numpy", "pallas", "batched"):
+            raise ValueError(f"backend must be 'numpy', 'pallas' or "
+                             f"'batched', got {self.backend!r}")
+        if self.solve_dtype not in ("fp64", "fp32", "fp32_refine"):
+            raise ValueError(f"solve_dtype must be 'fp64', 'fp32' or "
+                             f"'fp32_refine', got {self.solve_dtype!r}")

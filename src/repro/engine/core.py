@@ -233,7 +233,8 @@ class SolverEngine:
                 deadline_ms=self.config.default_deadline_ms)
         return execute_plan(a, self.plan(a, ctx=ctx), b,
                             solver=self.config.solver,
-                            backend=self.config.backend, ctx=ctx)
+                            backend=self.config.backend,
+                            solve_dtype=self.config.solve_dtype, ctx=ctx)
 
     def solve_batch(self, mats: Sequence,
                     bs: Optional[Sequence[Optional[np.ndarray]]] = None
@@ -244,7 +245,8 @@ class SolverEngine:
         if bs is None:
             bs = [None] * len(mats)
         return [execute_plan(a, p, b, solver=self.config.solver,
-                             backend=self.config.backend)
+                             backend=self.config.backend,
+                             solve_dtype=self.config.solve_dtype)
                 for a, p, b in zip(mats, plans, bs)]
 
     # -- serving -------------------------------------------------------------

@@ -12,6 +12,13 @@ Pallas kernels over 128-aligned VMEM tiles:
 * ``matmul_nt``     — tiled C ± A·Bᵀ with f32 VMEM accumulator; carries both
                       the panel solve (W·L⁻ᵀ) and the Schur update
                       (S −= L21·L21ᵀ), i.e. all the MXU FLOPs.
+* ``frontal_factor_batch`` — the level-scheduled workhorse: a grid over the
+                      batch dim where each program runs the *whole* blocked
+                      right-looking partial factorization of one front
+                      (chol tile → panel tri-solve → Schur rank-bs update,
+                      fused, f32 accumulate) entirely in VMEM. One launch
+                      factors every same-shape front of an assembly-tree
+                      level — no per-front host round trips.
 
 This is the TPU-native adaptation of the paper's MUMPS substrate: the
 irregular sparse assembly stays on the host, the dense front math is
@@ -26,15 +33,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["chol_tile", "tri_inv_tile", "matmul_nt"]
+__all__ = ["chol_tile", "tri_inv_tile", "matmul_nt", "frontal_factor_batch"]
 
 
 # ---------------------------------------------------------------------------
-# Diagonal-tile Cholesky (single block, right-looking, masked updates)
+# Shared single-tile bodies (used by both the tile kernels and the batched
+# front kernel; operate on jnp values, lower triangle authoritative)
 # ---------------------------------------------------------------------------
 
-def _chol_kernel(a_ref, l_ref):
-    a = a_ref[...].astype(jnp.float32)
+def _chol_block(a: jax.Array) -> jax.Array:
+    """Unblocked right-looking Cholesky of one (bs, bs) f32 block value."""
     bs = a.shape[0]
     i = jax.lax.broadcasted_iota(jnp.int32, (bs,), 0)
 
@@ -48,8 +56,32 @@ def _chol_kernel(a_ref, l_ref):
         a = jax.lax.dynamic_update_slice(a, l[:, None], (0, j))
         return a
 
-    a = jax.lax.fori_loop(0, bs, step, a)
-    l_ref[...] = jnp.tril(a).astype(l_ref.dtype)
+    return jnp.tril(jax.lax.fori_loop(0, bs, step, a))
+
+
+def _tri_inv_block(L: jax.Array) -> jax.Array:
+    """Inverse of a lower-triangular (bs, bs) f32 block (row-by-row)."""
+    bs = L.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+
+    def step(r, y):
+        lrow = jax.lax.dynamic_slice(L, (r, 0), (1, bs))
+        d = jax.lax.dynamic_slice(L, (r, r), (1, 1))[0, 0]
+        lrow = jnp.where(cols < r, lrow, 0.0)
+        erow = (cols == r).astype(jnp.float32)
+        yrow = (erow - jnp.dot(lrow, y, preferred_element_type=jnp.float32)) / d
+        return jax.lax.dynamic_update_slice(y, yrow, (r, 0))
+
+    return jax.lax.fori_loop(0, bs, step, jnp.zeros((bs, bs), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Diagonal-tile Cholesky (single block, right-looking, masked updates)
+# ---------------------------------------------------------------------------
+
+def _chol_kernel(a_ref, l_ref):
+    a = a_ref[...].astype(jnp.float32)
+    l_ref[...] = _chol_block(a).astype(l_ref.dtype)
 
 
 def chol_tile(a: jax.Array, *, interpret: bool = False) -> jax.Array:
@@ -71,19 +103,7 @@ def chol_tile(a: jax.Array, *, interpret: bool = False) -> jax.Array:
 
 def _tri_inv_kernel(l_ref, y_ref):
     L = l_ref[...].astype(jnp.float32)
-    bs = L.shape[0]
-    cols = jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-
-    def step(r, y):
-        lrow = jax.lax.dynamic_slice(L, (r, 0), (1, bs))
-        d = jax.lax.dynamic_slice(L, (r, r), (1, 1))[0, 0]
-        lrow = jnp.where(cols < r, lrow, 0.0)
-        erow = (cols == r).astype(jnp.float32)
-        yrow = (erow - jnp.dot(lrow, y, preferred_element_type=jnp.float32)) / d
-        return jax.lax.dynamic_update_slice(y, yrow, (r, 0))
-
-    y = jax.lax.fori_loop(0, bs, step, jnp.zeros((bs, bs), jnp.float32))
-    y_ref[...] = y.astype(y_ref.dtype)
+    y_ref[...] = _tri_inv_block(L).astype(y_ref.dtype)
 
 
 def tri_inv_tile(l: jax.Array, *, interpret: bool = False) -> jax.Array:
@@ -145,3 +165,62 @@ def matmul_nt(a: jax.Array, b: jax.Array, c: jax.Array, *,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(a, b, c)
+
+
+# ---------------------------------------------------------------------------
+# Batched partial factorization: one grid program = one whole front
+# ---------------------------------------------------------------------------
+
+def _frontal_batch_kernel(f_ref, o_ref, *, npanels: int, bs: int):
+    """Blocked right-looking partial Cholesky of one (M, M) front workspace.
+
+    Factors the leading ``npanels * bs`` columns; the trailing block ends up
+    holding the Schur complement. Panel loop is a static unroll (npanels is
+    a bucket constant), each panel fusing chol-tile → panel tri-solve (via
+    the tile inverse, i.e. a matmul) → rank-bs Schur update, all on the f32
+    VMEM-resident workspace. Lower triangle is authoritative throughout.
+    """
+    W = f_ref[...][0].astype(jnp.float32)
+    M = W.shape[0]
+    for t in range(npanels):
+        lo = t * bs
+        ltt = _chol_block(W[lo : lo + bs, lo : lo + bs])
+        W = jax.lax.dynamic_update_slice(W, ltt, (lo, lo))
+        below = M - lo - bs
+        if below == 0:
+            continue
+        inv = _tri_inv_block(ltt)
+        panel = W[lo + bs :, lo : lo + bs]
+        lpanel = jax.lax.dot_general(
+            panel, inv, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        W = jax.lax.dynamic_update_slice(W, lpanel, (lo + bs, lo))
+        trail = W[lo + bs :, lo + bs :] - jax.lax.dot_general(
+            lpanel, lpanel, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        W = jax.lax.dynamic_update_slice(W, trail, (lo + bs, lo + bs))
+    o_ref[...] = W[None].astype(o_ref.dtype)
+
+
+def frontal_factor_batch(w: jax.Array, npiv: int, *, bs: int,
+                         interpret: bool = False) -> jax.Array:
+    """Batched partial Cholesky over a stack of front workspaces.
+
+    ``w``: (B, M, M) f32, each front laid out with its (identity-padded)
+    pivot block in the leading ``npiv`` columns. Returns the factored
+    workspaces: tril of the leading block is L11, rows below it in the
+    pivot columns are L21, and the trailing block is the Schur complement
+    (lower triangle authoritative).
+    """
+    B, M, M2 = w.shape
+    assert M == M2 and 0 < npiv <= M and npiv % bs == 0, (w.shape, npiv, bs)
+    kernel = functools.partial(_frontal_batch_kernel,
+                               npanels=npiv // bs, bs=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, M, M), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, M, M), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, M, M), w.dtype),
+        interpret=interpret,
+    )(w)

@@ -19,10 +19,13 @@ import numpy as np
 
 from . import ref
 from .flash_attention import flash_attention
-from .frontal_cholesky import chol_tile, matmul_nt, tri_inv_tile
+from .frontal_cholesky import (chol_tile, frontal_factor_batch as
+                               _frontal_factor_batch_kernel, matmul_nt,
+                               tri_inv_tile)
 from .spmv_bell import bell_spmv, csr_to_bell
 
-__all__ = ["attention", "frontal_factor", "spmv", "matmul_nt_padded"]
+__all__ = ["attention", "frontal_factor", "frontal_factor_batch",
+           "frontal_factor_batch_ws", "spmv", "matmul_nt_padded"]
 
 
 def _interpret() -> bool:
@@ -126,6 +129,67 @@ def frontal_factor(f: jax.Array, npiv: int, *, bs: int = 128
     L21 = W[P : P + nrest, :npiv]
     S = W[P : P + nrest, P : P + nrest]
     S = jnp.tril(S) + jnp.tril(S, -1).T  # lower is authoritative
+    return L11, L21, S
+
+
+@functools.partial(jax.jit, static_argnames=("npiv", "bs", "interpret"))
+def _factor_batch_ws_jit(w, npiv, bs, interpret):
+    return _frontal_factor_batch_kernel(w, npiv, bs=bs, interpret=interpret)
+
+
+def _batch_block(npiv: int) -> int:
+    """Panel width for a bucket: npiv is a power of two ≥ 8, so min(32, npiv)
+    always divides it. 32 keeps the sequential chol-tile loop short while
+    the rank-bs updates stay matmul-shaped."""
+    return min(32, npiv)
+
+
+def frontal_factor_batch_ws(w: jax.Array, npiv: int, *,
+                            bs: int | None = None) -> jax.Array:
+    """Level-scheduled entry point: factor the leading ``npiv`` columns of
+    every (M, M) front workspace in the (B, M, M) stack ``w`` in ONE kernel
+    launch (grid over B). Calls jit-cache per (B, M, npiv, bs) — bucketed
+    shapes are powers of two, so a handful of compilations cover a whole
+    factorization. Returns the factored workspaces (see
+    :func:`repro.kernels.frontal_cholesky.frontal_factor_batch`)."""
+    if bs is None:
+        bs = _batch_block(npiv)
+    return _factor_batch_ws_jit(jnp.asarray(w, jnp.float32), npiv, bs,
+                                _interpret())
+
+
+def frontal_factor_batch(fs: jax.Array, npiv: int, *, bs: int | None = None
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched analogue of :func:`frontal_factor` for a uniform stack.
+
+    ``fs``: (B, m, m) SPD fronts sharing one pivot count. Pads the pivot
+    block to a tile multiple with decoupled identity columns (like
+    ``frontal_factor``), factors the stack in one launch, and returns
+    (L11, L21, S) with shapes (B, npiv, npiv) / (B, m-npiv, npiv) /
+    (B, m-npiv, m-npiv).
+    """
+    fs = jnp.asarray(fs, jnp.float32)
+    b, m, _ = fs.shape
+    nrest = m - npiv
+    if bs is None:
+        P = max(8, 1 << (npiv - 1).bit_length())
+        bs = _batch_block(P)
+    else:
+        P = ((npiv + bs - 1) // bs) * bs
+    M = P + nrest
+    W = jnp.zeros((b, M, M), jnp.float32)
+    W = W.at[:, :npiv, :npiv].set(jnp.tril(fs[:, :npiv, :npiv]))
+    if P > npiv:
+        pad_idx = jnp.arange(npiv, P)
+        W = W.at[:, pad_idx, pad_idx].set(1.0)
+    if nrest:
+        W = W.at[:, P:, :npiv].set(fs[:, npiv:, :npiv])
+        W = W.at[:, P:, P:].set(jnp.tril(fs[:, npiv:, npiv:]))
+    W = frontal_factor_batch_ws(W, P, bs=bs)
+    L11 = jnp.tril(W[:, :npiv, :npiv])
+    L21 = W[:, P:, :npiv]
+    S = W[:, P:, P:]
+    S = jnp.tril(S) + jnp.swapaxes(jnp.tril(S, -1), 1, 2)
     return L11, L21, S
 
 

@@ -1,16 +1,28 @@
 """Supernodal multifrontal Cholesky — the MUMPS analogue.
 
 The multifrontal method [Duff & Reid 1983] converts sparse factorization into
-a postorder traversal of an assembly tree whose nodes are **dense frontal
-matrices**. This is the TPU-native re-think of the paper's solver substrate:
-the irregular sparsity is confined to host-side assembly (scatter/extend-add
-index maps), while all heavy FLOPs are dense partial factorizations of
-fronts — matmul-shaped work for the MXU. The dense partial factorization has
-two interchangeable backends:
+a traversal of an assembly tree whose nodes are **dense frontal matrices**.
+This is the TPU-native re-think of the paper's solver substrate: the
+irregular sparsity is confined to host-side assembly (vectorized
+scatter/extend-add index maps), while all heavy FLOPs are dense partial
+factorizations of fronts — matmul-shaped work for the MXU. Three backends:
 
-* ``numpy``  — host BLAS; used for dataset labeling wall-times.
-* ``pallas`` — :func:`repro.kernels.ops.frontal_factor` (blocked right-looking
-  Cholesky with 128-aligned VMEM tiles), validated in interpret mode on CPU.
+* ``numpy``   — host BLAS, front-at-a-time; used for dataset labeling
+                wall-times and as the fp64 correctness reference.
+* ``pallas``  — :func:`repro.kernels.ops.frontal_factor` per front (blocked
+                right-looking Cholesky over 128-aligned VMEM tiles).
+* ``batched`` — **level-scheduled**: fronts are grouped by assembly-tree
+                level (:mod:`repro.sparse.schedule`), and every same-shape
+                front of a level is partially factored in ONE
+                :func:`repro.kernels.ops.frontal_factor_batch_ws` launch
+                (grid over the batch dim, fused chol → tri-solve → Schur
+                per front, f32 accumulate). nsup host round-trips become
+                nlevels × nbuckets kernel calls.
+
+The triangular solves are level-batched too: :func:`multifrontal_solve`
+stacks each level's factors into (B, P, P)/(B, R, P) tensors once and runs
+batched substitution sweeps (one LAPACK/einsum call per level-bucket)
+instead of a per-front scipy loop.
 
 Per-front cost is exactly the symbolic model of
 :func:`repro.sparse.symbolic.cholesky_flops`, so measured label times and the
@@ -26,10 +38,13 @@ import numpy as np
 import scipy.linalg as sla
 
 from .csr import CSRMatrix
+from .schedule import FrontPlan, LevelSchedule, build_schedule
 from .symbolic import SymbolicFactor, supernodes, symbolic_cholesky
 
 __all__ = ["MultifrontalFactor", "multifrontal_cholesky", "multifrontal_solve",
            "factor_and_solve_timed"]
+
+Backend = Literal["numpy", "pallas", "batched"]
 
 
 @dataclasses.dataclass
@@ -46,7 +61,53 @@ class MultifrontalFactor:
     fronts: List[_Front]
     sym: SymbolicFactor
     stats: dict
+    schedule: Optional[LevelSchedule] = None
+    dtype: np.dtype = np.float64
+    _sweeps: Optional["_LevelSweeps"] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
+
+# ---------------------------------------------------------------------------
+# Host-side assembly: vectorized scatter + extend-add
+# ---------------------------------------------------------------------------
+
+def _scatter_entries(F: np.ndarray, a: CSRMatrix, fp: FrontPlan,
+                     shift: int = 0) -> None:
+    """Scatter A[rows, c0:c1] (lower triangle, via symmetry of the CSR rows)
+    into the front workspace in one vectorized pass: global row indices map
+    to local positions by ``np.searchsorted`` over the sorted front rows.
+    ``shift`` displaces non-pivot rows by the pivot-padding width (the
+    batched workspace layout); 0 means the dense unpadded front."""
+    indptr, indices, data = a.indptr, a.indices, a.data
+    c0, c1 = fp.c0, fp.c1
+    start, end = int(indptr[c0]), int(indptr[c1])
+    cols = indices[start:end]
+    vals = data[start:end]
+    colid = np.repeat(np.arange(c0, c1), np.diff(indptr[c0 : c1 + 1]))
+    sel = cols >= colid            # keep the lower triangle (row ≥ col)
+    loc = np.searchsorted(fp.rows, cols[sel])
+    if shift:
+        loc = np.where(loc >= fp.npiv, loc + shift, loc)
+    F[loc, colid[sel] - c0] = vals[sel]
+
+
+def _extend_add(F: np.ndarray, fp: FrontPlan, urows: np.ndarray,
+                U: np.ndarray, shift: int = 0) -> None:
+    """Add a child's Schur update (rows `urows`) into the front workspace."""
+    idx = np.searchsorted(fp.rows, urows)
+    if idx.size and (idx[-1] >= fp.rows.size
+                     or not np.array_equal(fp.rows[idx], urows)):
+        raise RuntimeError(
+            "assembly-tree containment violated (supernode "
+            f"{fp.k}: update rows not a subset of front rows)")
+    if shift:
+        idx = np.where(idx >= fp.npiv, idx + shift, idx)
+    F[np.ix_(idx, idx)] += U
+
+
+# ---------------------------------------------------------------------------
+# Dense partial factorization backends (front-at-a-time)
+# ---------------------------------------------------------------------------
 
 def _partial_factor_numpy(F: np.ndarray, npiv: int):
     """Dense partial Cholesky: factor pivot block, panel solve, Schur update."""
@@ -57,8 +118,8 @@ def _partial_factor_numpy(F: np.ndarray, npiv: int):
                                    trans="N").T
         S = F[npiv:, npiv:] - L21 @ L21.T
     else:
-        L21 = np.empty((0, npiv))
-        S = np.empty((0, 0))
+        L21 = np.empty((0, npiv), dtype=F.dtype)
+        S = np.empty((0, 0), dtype=F.dtype)
     return L11, L21, S
 
 
@@ -68,82 +129,196 @@ def _partial_factor_pallas(F: np.ndarray, npiv: int):
     return np.asarray(L11), np.asarray(L21), np.asarray(S)
 
 
+# ---------------------------------------------------------------------------
+# Numeric phase
+# ---------------------------------------------------------------------------
+
 def multifrontal_cholesky(
     a: CSRMatrix,
     sym: Optional[SymbolicFactor] = None,
     relax: int = 8,
-    backend: Literal["numpy", "pallas"] = "numpy",
+    backend: Backend = "numpy",
+    dtype: np.dtype | type = np.float64,
 ) -> MultifrontalFactor:
+    """Numeric supernodal factorization of an SPD CSR matrix.
+
+    ``dtype`` selects the front-math precision on the ``numpy`` backend
+    (fp64 or fp32); the ``pallas``/``batched`` backends always accumulate in
+    f32 (pair them with :mod:`repro.sparse.refine` to recover fp64-level
+    residuals). The returned factor carries the :class:`LevelSchedule` used,
+    so :func:`multifrontal_solve` can run level-batched sweeps.
+    """
     assert a.data is not None, "numeric factorization needs values"
-    n = a.n
     if sym is None:
         sym = symbolic_cholesky(a)
     snode_ptr, snode_of = supernodes(sym, relax=relax)
-    nsup = snode_ptr.shape[0] - 1
-    Lp, Li = sym.Lp, sym.Li
-    indptr, indices, data = a.indptr, a.indices, a.data
-    partial = _partial_factor_numpy if backend == "numpy" else _partial_factor_pallas
+    schedule = build_schedule(sym, snode_ptr, snode_of)
+    eff_dtype = np.dtype(np.float32 if backend in ("pallas", "batched")
+                         else dtype)
 
-    # Row structure of each supernode: union of its columns' patterns.
+    if backend == "batched":
+        fronts = _factor_batched(a, schedule)
+    else:
+        fronts = _factor_sequential(a, schedule, backend, eff_dtype)
+
+    stats = dict(schedule.stats())  # nsup, nlevels, widths, occupancy, flops
+    stats.update(n=a.n,
+                 peak_front=max((fp.m for fp in schedule.fronts), default=0),
+                 nnz_L=sym.nnz_L, fill=sym.fill, sym_flops=sym.flops,
+                 backend=backend, dtype=str(eff_dtype))
+    return MultifrontalFactor(a.n, fronts, sym, stats, schedule=schedule,
+                              dtype=eff_dtype)
+
+
+def _factor_sequential(a: CSRMatrix, schedule: LevelSchedule,
+                       backend: Backend, dtype: np.dtype) -> List[_Front]:
+    """Front-at-a-time postorder traversal (numpy / per-front pallas)."""
+    partial = (_partial_factor_numpy if backend == "numpy"
+               else _partial_factor_pallas)
+    nsup = schedule.nsup
     fronts: List[_Front] = []
-    # pending updates per supernode: list of (rows, dense update)
     pending: List[List[Tuple[np.ndarray, np.ndarray]]] = [[] for _ in range(nsup)]
-    peak_front = 0
-    total_front_flops = 0
-
-    for k in range(nsup):
-        c0, c1 = int(snode_ptr[k]), int(snode_ptr[k + 1])
-        npiv = c1 - c0
-        pats = [Li[Lp[j] : Lp[j + 1]] for j in range(c0, c1)]
-        rows = np.unique(np.concatenate(pats))
-        rows = rows[rows >= c0]
-        # pivots first, then the remainder (np.unique sorted => already true)
-        m = rows.shape[0]
-        pos = {int(r): t for t, r in enumerate(rows)}
-        F = np.zeros((m, m), dtype=np.float64)
-
-        # Scatter original entries A[rows, c0:c1] (use symmetry: row j of A).
-        for j in range(c0, c1):
-            lo, hi = indptr[j], indptr[j + 1]
-            cols_j = indices[lo:hi]
-            vals_j = data[lo:hi]
-            sel = cols_j >= j
-            for c, v in zip(cols_j[sel], vals_j[sel]):
-                ci = pos.get(int(c))
-                if ci is not None:
-                    F[ci, j - c0] = v
-
-        # Extend-add children updates.
-        for (urows, U) in pending[k]:
-            idx = np.searchsorted(rows, urows)
-            if idx.size and (idx[-1] >= rows.size
-                             or not np.array_equal(rows[idx], urows)):
-                raise RuntimeError(
-                    "assembly-tree containment violated (supernode "
-                    f"{k}: update rows not a subset of front rows)")
-            F[np.ix_(idx, idx)] += U
-        pending[k] = []
-
-        peak_front = max(peak_front, m)
-        total_front_flops += npiv * npiv * npiv // 3 + npiv * npiv * (m - npiv) \
-            + npiv * (m - npiv) ** 2
-
-        L11, L21, S = partial(F, npiv)
-        fronts.append(_Front((c0, c1), rows, L11, L21))
-
-        if m > npiv:
-            urows = rows[npiv:]
-            parent = int(snode_of[int(urows[0])])
-            pending[parent].append((urows, S))
-
-    stats = dict(n=n, nsup=nsup, peak_front=int(peak_front),
-                 front_flops=int(total_front_flops),
-                 nnz_L=sym.nnz_L, fill=sym.fill, sym_flops=sym.flops)
-    return MultifrontalFactor(n, fronts, sym, stats)
+    for fp in schedule.fronts:
+        F = np.zeros((fp.m, fp.m), dtype=dtype)
+        _scatter_entries(F, a, fp)
+        for (urows, U) in pending[fp.k]:
+            _extend_add(F, fp, urows, U)
+        pending[fp.k] = []
+        L11, L21, S = partial(F, fp.npiv)
+        fronts.append(_Front((fp.c0, fp.c1), fp.rows, L11, L21))
+        if fp.nrest:
+            pending[fp.parent].append((fp.rows[fp.npiv :], S))
+    return fronts
 
 
-def multifrontal_solve(f: MultifrontalFactor, b: np.ndarray) -> np.ndarray:
-    """Solve A x = b with the supernodal factor (forward + backward sweeps)."""
+def _factor_batched(a: CSRMatrix, schedule: LevelSchedule) -> List[_Front]:
+    """Level-scheduled factorization: per (level, bucket), assemble every
+    member front into one padded f32 workspace stack and factor the stack
+    in a single batched kernel launch. Pivot padding columns are decoupled
+    identity columns; update-row padding is zero rows — both factor
+    trivially and contribute nothing to L or the Schur complements."""
+    from repro.kernels import ops
+
+    nsup = schedule.nsup
+    fronts: List[Optional[_Front]] = [None] * nsup
+    pending: List[List[Tuple[np.ndarray, np.ndarray]]] = [[] for _ in range(nsup)]
+    for li in range(schedule.nlevels):
+        for bucket in schedule.buckets[li]:
+            B, P, M = len(bucket.members), bucket.P, bucket.M
+            W = np.zeros((B, M, M), dtype=np.float32)
+            for bi, k in enumerate(bucket.members):
+                fp = schedule.fronts[k]
+                shift = P - fp.npiv
+                if shift:
+                    pad = np.arange(fp.npiv, P)
+                    W[bi, pad, pad] = 1.0
+                _scatter_entries(W[bi], a, fp, shift)
+                for (urows, U) in pending[k]:
+                    _extend_add(W[bi], fp, urows, U, shift)
+                pending[k] = []
+            Wf = np.asarray(ops.frontal_factor_batch_ws(W, P))
+            for bi, k in enumerate(bucket.members):
+                fp = schedule.fronts[k]
+                npiv, nrest = fp.npiv, fp.nrest
+                L11 = np.tril(Wf[bi, :npiv, :npiv])
+                L21 = Wf[bi, P : P + nrest, :npiv]
+                fronts[k] = _Front((fp.c0, fp.c1), fp.rows, L11, L21)
+                if nrest:
+                    S = Wf[bi, P : P + nrest, P : P + nrest]
+                    pending[fp.parent].append((fp.rows[npiv:], S))
+    return fronts  # type: ignore[return-value]
+
+
+# ---------------------------------------------------------------------------
+# Triangular sweeps
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _SweepGroup:
+    """One level-bucket's factors stacked for batched substitution."""
+
+    L11: np.ndarray        # (B, P, P) unit-diag padded, fp64
+    L11T: np.ndarray       # (B, P, P) transposed copy (backward sweep)
+    L21: np.ndarray        # (B, R, P)
+    piv: np.ndarray        # (B, P) global pivot indices (0 at pads)
+    pmask: np.ndarray      # (B, P) bool, True at real pivots
+    rest: np.ndarray       # (B, R) global update rows (0 at pads)
+    rmask: np.ndarray      # (B, R) bool
+
+
+@dataclasses.dataclass
+class _LevelSweeps:
+    levels: List[List[_SweepGroup]]
+
+
+def _build_sweeps(f: MultifrontalFactor) -> _LevelSweeps:
+    sched = f.schedule
+    assert sched is not None
+    levels: List[List[_SweepGroup]] = []
+    for li in range(sched.nlevels):
+        groups: List[_SweepGroup] = []
+        for bucket in sched.buckets[li]:
+            B, P, R = len(bucket.members), bucket.P, bucket.R
+            L11 = np.zeros((B, P, P))
+            diag = np.arange(P)
+            L11[:, diag, diag] = 1.0
+            L21 = np.zeros((B, R, P))
+            piv = np.zeros((B, P), dtype=np.int64)
+            pmask = np.zeros((B, P), dtype=bool)
+            rest = np.zeros((B, R), dtype=np.int64)
+            rmask = np.zeros((B, R), dtype=bool)
+            for bi, k in enumerate(bucket.members):
+                fr = f.fronts[k]
+                c0, c1 = fr.cols
+                npiv = c1 - c0
+                nrest = fr.L21.shape[0]
+                L11[bi, :npiv, :npiv] = fr.L11
+                L21[bi, :nrest, :npiv] = fr.L21
+                piv[bi, :npiv] = np.arange(c0, c1)
+                pmask[bi, :npiv] = True
+                rest[bi, :nrest] = fr.rows[npiv:]
+                rmask[bi, :nrest] = True
+            groups.append(_SweepGroup(
+                L11, np.ascontiguousarray(L11.transpose(0, 2, 1)), L21,
+                piv, pmask, rest, rmask))
+        levels.append(groups)
+    return _LevelSweeps(levels)
+
+
+def _solve_level(f: MultifrontalFactor, b: np.ndarray) -> np.ndarray:
+    """Level-batched forward/backward sweeps: one batched triangular solve
+    (``np.linalg.solve`` on the stacked unit-padded factors) plus one
+    batched update einsum per level-bucket, instead of a scipy call per
+    front. Update scatters within a level never collide with that level's
+    pivots (parents live on strictly higher levels), so bucket order is
+    free and cross-front accumulation uses ``np.subtract.at``."""
+    if f._sweeps is None:
+        f._sweeps = _build_sweeps(f)
+    sw = f._sweeps
+    x = b.astype(np.float64).copy()
+    # forward: L y = b, leaves upward
+    for groups in sw.levels:
+        for g in groups:
+            xb = np.where(g.pmask, x[g.piv], 0.0)
+            y = np.linalg.solve(g.L11, xb[..., None])[..., 0]
+            x[g.piv[g.pmask]] = y[g.pmask]
+            if g.rest.shape[1]:
+                upd = np.einsum("brp,bp->br", g.L21, y)
+                np.subtract.at(x, g.rest[g.rmask], upd[g.rmask])
+    # backward: Lᵀ x = y, roots downward
+    for groups in reversed(sw.levels):
+        for g in groups:
+            rhs = np.where(g.pmask, x[g.piv], 0.0)
+            if g.rest.shape[1]:
+                xr = np.where(g.rmask, x[g.rest], 0.0)
+                rhs = rhs - np.einsum("brp,br->bp", g.L21, xr)
+            y = np.linalg.solve(g.L11T, rhs[..., None])[..., 0]
+            x[g.piv[g.pmask]] = y[g.pmask]
+    return x
+
+
+def _solve_sequential(f: MultifrontalFactor, b: np.ndarray) -> np.ndarray:
+    """Per-front scipy sweeps (the pre-level-scheduling reference path)."""
     x = b.astype(np.float64).copy()
     # forward: L y = b
     for fr in f.fronts:
@@ -164,15 +339,35 @@ def multifrontal_solve(f: MultifrontalFactor, b: np.ndarray) -> np.ndarray:
     return x
 
 
+def multifrontal_solve(f: MultifrontalFactor, b: np.ndarray,
+                       mode: Literal["auto", "level", "seq"] = "auto"
+                       ) -> np.ndarray:
+    """Solve A x = b with the supernodal factor.
+
+    ``mode="level"`` (the default when the factor carries a schedule) runs
+    the level-batched sweeps; ``"seq"`` keeps the per-front loop (reference
+    and fallback). Repeated solves reuse the stacked sweep tensors cached on
+    the factor.
+    """
+    if mode == "seq" or (mode == "auto" and f.schedule is None):
+        return _solve_sequential(f, b)
+    if f.schedule is None:
+        raise ValueError("mode='level' needs a factor with a schedule")
+    return _solve_level(f, b)
+
+
 def factor_and_solve_timed(a: CSRMatrix, b: np.ndarray | None = None,
                            relax: int = 8,
-                           sym: Optional[SymbolicFactor] = None) -> dict:
+                           sym: Optional[SymbolicFactor] = None,
+                           backend: Backend = "numpy") -> dict:
     """Measured factor+solve wall time — the per-(matrix, ordering) label
     signal, mirroring the paper's MUMPS timings.
 
     Passing a precomputed ``sym`` (e.g. from a cached
     :class:`repro.core.plan.ExecutionPlan`) skips the symbolic stage
-    entirely; ``t_symbolic`` is then reported as 0.
+    entirely; ``t_symbolic`` is then reported as 0. ``relax`` tunes the
+    supernode amalgamation and ``backend`` picks the front-math substrate,
+    so labeling can time the Pallas / batched paths too.
     """
     if b is None:
         rng = np.random.default_rng(0)
@@ -184,7 +379,7 @@ def factor_and_solve_timed(a: CSRMatrix, b: np.ndarray | None = None,
     else:
         t_sym = 0.0
     t0 = time.perf_counter()
-    f = multifrontal_cholesky(a, sym)
+    f = multifrontal_cholesky(a, sym, relax=relax, backend=backend)
     t_fac = time.perf_counter() - t0
     t0 = time.perf_counter()
     x = multifrontal_solve(f, b)

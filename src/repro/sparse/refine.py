@@ -1,0 +1,74 @@
+"""Mixed-precision iterative refinement for the direct solve.
+
+The classic trick [Wilkinson 1963; Carson & Higham 2018]: factor once in low
+precision (fp32 — half the memory traffic, double the MXU rate), then recover
+working-precision accuracy with a short residual-correction loop in fp64:
+
+    x₀ = L⁻ᵀ L⁻¹ b           (low-precision factor)
+    rᵢ = b − A xᵢ            (fp64 sparse matvec — cheap, O(nnz))
+    xᵢ₊₁ = xᵢ + L⁻ᵀ L⁻¹ rᵢ
+
+Each sweep multiplies the error by ~κ(A)·ε₃₂, so a handful of iterations
+reaches the fp64 floor whenever κ(A) ≪ 1/ε₃₂. The loop is
+residual-controlled: it stops at ``tol``, at ``max_iter``, or when progress
+stalls (guards ill-conditioned systems against cycling forever).
+
+This is what makes the fp32 ``batched``/``pallas`` factorization backends of
+:mod:`repro.sparse.multifrontal` usable as drop-in replacements for the fp64
+numpy path: ``EngineConfig.solve_dtype = "fp32_refine"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List
+
+import numpy as np
+
+__all__ = ["RefineInfo", "refine_solve", "DEFAULT_TOL"]
+
+DEFAULT_TOL = 1e-12
+_STALL_FACTOR = 0.5   # require ≥ 2× residual reduction per sweep to continue
+
+
+@dataclasses.dataclass
+class RefineInfo:
+    iterations: int          # correction sweeps applied (0 = first solve enough)
+    residuals: List[float]   # relative residual after each evaluation
+    converged: bool
+
+    @property
+    def final_residual(self) -> float:
+        return self.residuals[-1] if self.residuals else float("inf")
+
+
+def refine_solve(matvec: Callable[[np.ndarray], np.ndarray],
+                 solve: Callable[[np.ndarray], np.ndarray],
+                 b: np.ndarray, *,
+                 tol: float = DEFAULT_TOL,
+                 max_iter: int = 10) -> tuple[np.ndarray, RefineInfo]:
+    """Solve A x = b to fp64 accuracy using a low-precision inner solver.
+
+    ``matvec`` must be the fp64 operator of A; ``solve`` is the (possibly
+    low-precision) factorization solve applied to an fp64 right-hand side.
+    Returns ``(x, RefineInfo)``.
+    """
+    b = np.asarray(b, dtype=np.float64)
+    nb = float(np.linalg.norm(b))
+    if nb == 0.0:
+        return np.zeros_like(b), RefineInfo(0, [0.0], True)
+    x = np.asarray(solve(b), dtype=np.float64)
+    residuals: List[float] = []
+    iters = 0
+    while True:
+        r = b - np.asarray(matvec(x), dtype=np.float64)
+        rel = float(np.linalg.norm(r)) / nb
+        residuals.append(rel)
+        if rel <= tol:
+            return x, RefineInfo(iters, residuals, True)
+        if iters >= max_iter:
+            return x, RefineInfo(iters, residuals, False)
+        if len(residuals) >= 2 and rel > _STALL_FACTOR * residuals[-2]:
+            # stalled: conditioning beyond what fp32 corrections can fix
+            return x, RefineInfo(iters, residuals, False)
+        x = x + np.asarray(solve(r), dtype=np.float64)
+        iters += 1

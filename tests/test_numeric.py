@@ -42,3 +42,14 @@ def test_multifrontal_pallas_backend(rng):
     f = multifrontal_cholesky(m, backend="pallas")
     x = multifrontal_solve(f, b)
     np.testing.assert_allclose(x, _solve_ref(m, b), rtol=1e-4, atol=1e-4)
+
+
+def test_multifrontal_batched_backend(rng):
+    """Level-scheduled batched factorization, one device call per bucket."""
+    from repro.sparse.dataset import grid2d
+    m = grid2d(10, 10, "g10")
+    b = rng.standard_normal(m.n)
+    f = multifrontal_cholesky(m, backend="batched")
+    x = multifrontal_solve(f, b)
+    np.testing.assert_allclose(x, _solve_ref(m, b), rtol=1e-4, atol=1e-4)
+    assert f.schedule is not None and f.stats["nbatches"] >= 1

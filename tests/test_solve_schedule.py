@@ -1,0 +1,222 @@
+"""Level-scheduled batched factorization: kernel parity, schedule
+invariants, level sweeps, mixed-precision refinement, plumbing."""
+import numpy as np
+import pytest
+
+from repro.sparse.multifrontal import (_partial_factor_numpy,
+                                       factor_and_solve_timed,
+                                       multifrontal_cholesky,
+                                       multifrontal_solve)
+from repro.sparse.refine import refine_solve
+from repro.sparse.schedule import build_schedule
+from repro.sparse.symbolic import symbolic_cholesky
+
+RNG = np.random.default_rng(7)
+
+
+def _spd(m):
+    a = RNG.standard_normal((m, m))
+    return a @ a.T + m * np.eye(m)
+
+
+def _solve_ref(m, b):
+    return np.linalg.solve(m.to_dense(), b)
+
+
+# ---------------------------------------------------------------------------
+# backend parity: numpy ↔ per-front pallas ↔ batched (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,npiv,batch", [
+    (12, 5, 3), (24, 24, 2), (40, 17, 4), (9, 1, 5), (33, 8, 1),
+])
+def test_partial_factor_three_way_parity(m, npiv, batch):
+    from repro.kernels import ops
+
+    fs = np.stack([_spd(m) for _ in range(batch)])
+    bL11, bL21, bS = ops.frontal_factor_batch(fs, npiv)
+    for i in range(batch):
+        nL11, nL21, nS = _partial_factor_numpy(fs[i].copy(), npiv)
+        pL11, pL21, pS = ops.frontal_factor(fs[i], npiv)
+        for got in (np.asarray(pL11), np.asarray(bL11[i])):
+            np.testing.assert_allclose(got, nL11, rtol=1e-4, atol=1e-4)
+        if npiv < m:
+            for got in (np.asarray(pL21), np.asarray(bL21[i])):
+                np.testing.assert_allclose(got, nL21, rtol=1e-4, atol=1e-4)
+            for got in (np.asarray(pS), np.asarray(bS[i])):
+                np.testing.assert_allclose(got, nS, rtol=1e-3, atol=1e-3)
+
+
+def test_batched_backend_matches_numpy_elementwise(small_suite):
+    """The level-scheduled factor equals the numpy factor front-by-front
+    (f32 tolerance) — same supernodes, same rows, same L blocks."""
+    for m in small_suite:
+        fn = multifrontal_cholesky(m, backend="numpy")
+        fb = multifrontal_cholesky(m, backend="batched")
+        assert len(fn.fronts) == len(fb.fronts)
+        for a, b in zip(fn.fronts, fb.fronts):
+            assert a.cols == b.cols
+            np.testing.assert_array_equal(a.rows, b.rows)
+            np.testing.assert_allclose(b.L11, a.L11, rtol=1e-4, atol=1e-5)
+            np.testing.assert_allclose(b.L21, a.L21, rtol=1e-4, atol=1e-5)
+
+
+def test_batched_backend_end_to_end(small_suite, rng):
+    for m in small_suite:
+        b = rng.standard_normal(m.n)
+        f = multifrontal_cholesky(m, backend="batched")
+        x = multifrontal_solve(f, b)
+        resid = np.linalg.norm(m.matvec(x) - b) / np.linalg.norm(b)
+        assert resid < 1e-5  # f32 factorization floor
+        assert f.stats["backend"] == "batched"
+        assert f.stats["dtype"] == "float32"
+
+
+# ---------------------------------------------------------------------------
+# schedule invariants
+# ---------------------------------------------------------------------------
+
+def test_schedule_invariants(small_suite):
+    for m in small_suite:
+        sym = symbolic_cholesky(m)
+        sched = build_schedule(sym)
+        seen = np.concatenate([lv for lv in sched.levels]) \
+            if sched.levels else np.empty(0, dtype=np.int64)
+        # levels partition the supernodes
+        assert sorted(seen.tolist()) == list(range(sched.nsup))
+        for fp in sched.fronts:
+            # parents live on strictly higher levels (the batching invariant)
+            if fp.parent >= 0:
+                assert sched.fronts[fp.parent].level > fp.level
+            else:
+                assert fp.nrest == 0  # roots have no update rows
+        # buckets cover their level, pads dominate true sizes
+        for li, lvl_buckets in enumerate(sched.buckets):
+            members = [k for b in lvl_buckets for k in b.members]
+            assert sorted(members) == sorted(sched.levels[li].tolist())
+            for b in lvl_buckets:
+                for k in b.members:
+                    fp = sched.fronts[k]
+                    assert fp.npiv <= b.P and fp.nrest <= b.R
+        s = sched.stats()
+        assert 0 < s["occupancy"] <= 1.0
+        assert s["nlevels"] == max(fp.level for fp in sched.fronts) + 1
+
+
+def test_schedule_flops_match_factor_stats(small_suite):
+    for m in small_suite[:2]:
+        sym = symbolic_cholesky(m)
+        sched = build_schedule(sym)
+        f = multifrontal_cholesky(m, sym)
+        assert f.stats["front_flops"] == sched.stats()["front_flops"]
+
+
+# ---------------------------------------------------------------------------
+# level-batched triangular sweeps
+# ---------------------------------------------------------------------------
+
+def test_level_sweeps_match_sequential(small_suite, rng):
+    for m in small_suite:
+        b = rng.standard_normal(m.n)
+        f = multifrontal_cholesky(m)
+        x_level = multifrontal_solve(f, b, mode="level")
+        x_seq = multifrontal_solve(f, b, mode="seq")
+        np.testing.assert_allclose(x_level, x_seq, rtol=1e-12, atol=1e-12)
+        np.testing.assert_allclose(x_level, _solve_ref(m, b),
+                                   rtol=1e-8, atol=1e-8)
+
+
+def test_level_sweeps_cache_reused(small_suite, rng):
+    m = small_suite[0]
+    f = multifrontal_cholesky(m)
+    multifrontal_solve(f, rng.standard_normal(m.n))
+    sweeps = f._sweeps
+    assert sweeps is not None
+    multifrontal_solve(f, rng.standard_normal(m.n))
+    assert f._sweeps is sweeps  # stacked tensors built once
+
+
+# ---------------------------------------------------------------------------
+# mixed precision + iterative refinement
+# ---------------------------------------------------------------------------
+
+def test_refinement_reaches_fp64_floor(small_suite, rng):
+    """Property: fp32 batched factor + fp64 refinement converges to ~fp64
+    residual, strictly better than the unrefined fp32 solve."""
+    for m in small_suite:
+        b = rng.standard_normal(m.n)
+        f = multifrontal_cholesky(m, backend="batched")
+        x0 = multifrontal_solve(f, b)
+        r0 = np.linalg.norm(m.matvec(x0) - b) / np.linalg.norm(b)
+        x, info = refine_solve(m.matvec,
+                               lambda r: multifrontal_solve(f, r), b)
+        assert info.converged
+        assert info.final_residual <= 1e-10
+        assert info.final_residual < r0
+        # residual history is monotone decreasing until convergence
+        assert all(b_ <= a_ for a_, b_ in zip(info.residuals,
+                                              info.residuals[1:]))
+
+
+def test_refine_zero_rhs():
+    from repro.sparse.dataset import grid2d
+    m = grid2d(6, 6, "g6")
+    f = multifrontal_cholesky(m, backend="batched")
+    x, info = refine_solve(m.matvec, lambda r: multifrontal_solve(f, r),
+                           np.zeros(m.n))
+    assert np.all(x == 0) and info.converged
+
+
+# ---------------------------------------------------------------------------
+# plumbing: factor_and_solve_timed + execute_plan + EngineConfig
+# ---------------------------------------------------------------------------
+
+def test_factor_and_solve_timed_forwards_relax_and_backend(monkeypatch):
+    from repro.sparse import multifrontal as mf
+    m = __import__("repro.sparse.dataset", fromlist=["grid2d"]).grid2d(
+        8, 8, "g8")
+    seen = {}
+    real = mf.multifrontal_cholesky
+
+    def spy(a, sym=None, **kw):
+        seen.update(kw)
+        return real(a, sym, **kw)
+
+    monkeypatch.setattr(mf, "multifrontal_cholesky", spy)
+    rb = factor_and_solve_timed(m, relax=3, backend="batched")
+    assert seen == {"relax": 3, "backend": "batched"}
+    assert rb["backend"] == "batched"
+    assert rb["residual"] < 1e-5
+
+
+def test_execute_plan_solve_dtype_paths():
+    from repro.core.plan import PlanBuilder, execute_plan
+    from repro.sparse.dataset import grid2d
+
+    m = grid2d(8, 8, "g8")
+    b = np.random.default_rng(0).standard_normal(m.n)
+    plan = PlanBuilder().build(m, algorithm="amd")
+    r64 = execute_plan(m, plan, b, backend="numpy", solve_dtype="fp64")
+    assert r64["solve_dtype"] == "fp64" and r64["residual"] < 1e-10
+    # f32-only backend auto-promotes fp64 -> fp32_refine
+    rb = execute_plan(m, plan, b, backend="batched", solve_dtype="fp64")
+    assert rb["solve_dtype"] == "fp32_refine"
+    assert rb["refine_converged"] and rb["residual"] < 1e-10
+    # the cached plan records the numeric path that last produced results
+    assert plan.meta["solve_backend"] == "batched"
+    assert plan.meta["solve_dtype"] == "fp32_refine"
+    r32 = execute_plan(m, plan, b, backend="batched", solve_dtype="fp32")
+    assert r32["solve_dtype"] == "fp32" and r32["residual"] < 1e-5
+    with pytest.raises(ValueError):
+        execute_plan(m, plan, b, solve_dtype="fp16")
+
+
+def test_engine_config_validates_solve_knobs():
+    from repro.engine import EngineConfig
+
+    cfg = EngineConfig(backend="batched", solve_dtype="fp32_refine")
+    assert cfg.backend == "batched"
+    with pytest.raises(ValueError):
+        EngineConfig(backend="cuda")
+    with pytest.raises(ValueError):
+        EngineConfig(solve_dtype="fp16")
