@@ -1,8 +1,8 @@
-"""Numeric-solve benchmark: the perf gate for the level-scheduled backend.
+"""Numeric-solve benchmark: the perf gate for the level-scheduled backends.
 
 PR 2's e2e benchmark showed >95% of warm-path time is the numeric
 factorization, so this is the trajectory that matters now. Per matrix ×
-backend (numpy / per-front pallas / level-batched):
+backend (numpy / per-front pallas / level-batched / pipelined):
 
 * cold (first call, includes kernel compilation) and warm factor+solve
   wall times, residuals,
@@ -14,14 +14,24 @@ backend (numpy / per-front pallas / level-batched):
   batched backend can actually exploit),
 * roofline terms (compute vs memory seconds from the flop model + front
   bytes) consumed by ``benchmarks/roofline.py``,
+* for the batched/pipelined backends: the **overlap efficiency** (host
+  assembly seconds over assembly + device-blocked seconds — the fraction
+  of overlappable time the backend kept the host busy) and the solve-stage
+  split (assemble/dispatch/sync),
 * for the batched backend: the fp32 residual and the fp32+fp64-refinement
-  residual/iterations.
+  residual/iterations,
+* when both run: the max-abs solution difference pipelined vs batched
+  (the two share every kernel, so this is 0.0 up to nondeterminism-free
+  reordering — the parity gate).
 
 Emits ``BENCH_solve.json`` and exits non-zero when a gate fails:
 ``--gate-residual-fp64`` (numpy backend), ``--gate-residual-refine``
-(batched + refinement), and ``--gate-flop-ratio`` (dense-front flops vs
-symbolic model drift). CI runs ``--quick`` on the interpret backend and
-uploads the JSON as the second ``BENCH_*`` trajectory artifact.
+(batched + refinement), ``--gate-flop-ratio`` (dense-front flops vs
+symbolic model drift), ``--gate-pipelined-parity`` (solution drift vs
+batched), and ``--gate-overlap-margin`` (pipelined overlap efficiency must
+reach this fraction of the batched baseline). CI runs ``--quick`` on the
+interpret backend and uploads the JSON as the second ``BENCH_*``
+trajectory artifact.
 """
 from __future__ import annotations
 
@@ -76,6 +86,9 @@ def bench_matrix(a, backends: List[str], repeats: int) -> Dict:
         max_level_width=s["max_level_width"],
         fronts_per_level=s["nsup"] / max(s["nlevels"], 1),
         occupancy=s["occupancy"], nbatches=s["nbatches"],
+        per_level_occupancy=s["per_level_occupancy"],
+        min_level_occupancy=s["min_level_occupancy"],
+        pad=s["pad"],
         sym_flops=sym.flops, front_flops=s["front_flops"],
         flop_ratio=s["front_flops"] / max(sym.flops, 1),
         roofline=dict(
@@ -101,6 +114,12 @@ def bench_matrix(a, backends: List[str], repeats: int) -> Dict:
             residual=warm["residual"],
             gflops=s["front_flops"] / max(warm["t_factor"], 1e-12) / 1e9,
         )
+        # level-scheduled backends report their solve-stage split and the
+        # overlap metric the pipelined gate runs on
+        for k in ("t_factor_assemble", "t_factor_dispatch", "t_factor_sync",
+                  "overlap_efficiency"):
+            if k in warm:
+                entry[k] = warm[k]
         if backend == "batched":
             f = multifrontal_cholesky(a, sym, backend="batched")
             t0 = time.perf_counter()
@@ -120,6 +139,18 @@ def bench_matrix(a, backends: List[str], repeats: int) -> Dict:
         rec["speedup_batched_vs_numpy"] = (bk["numpy"]["warm_factor_s"]
                                            / max(bk["batched"]["warm_factor_s"],
                                                  1e-12))
+    if "batched" in bk and "pipelined" in bk:
+        rec["speedup_pipelined_vs_batched"] = (
+            bk["batched"]["warm_factor_s"]
+            / max(bk["pipelined"]["warm_factor_s"], 1e-12))
+        # parity: both paths run the same kernels, so the factors agree to
+        # the last bit — compare the solutions directly
+        fb = multifrontal_cholesky(a, sym, backend="batched")
+        fp_ = multifrontal_cholesky(a, sym, backend="pipelined")
+        xb = multifrontal_solve(fb, b)
+        xp = multifrontal_solve(fp_, b)
+        denom = max(float(np.abs(xb).max()), 1e-30)
+        rec["pipelined_parity_maxdiff"] = float(np.abs(xp - xb).max()) / denom
     return rec
 
 
@@ -145,6 +176,22 @@ def run_gates(records: List[Dict], args) -> List[str]:
         if not (0.8 <= ratio <= args.gate_flop_ratio):
             fails.append(f"{r['name']}: front/symbolic flop ratio {ratio:.2f} "
                          f"outside [0.8, {args.gate_flop_ratio}]")
+        if "pipelined_parity_maxdiff" in r:
+            d = r["pipelined_parity_maxdiff"]
+            if d > args.gate_pipelined_parity:
+                fails.append(f"{r['name']}: pipelined vs batched solution "
+                             f"drift {d:.2e} > "
+                             f"{args.gate_pipelined_parity:.0e}")
+        bkk = r["backends"]
+        if "batched" in bkk and "pipelined" in bkk:
+            ob = bkk["batched"].get("overlap_efficiency")
+            op = bkk["pipelined"].get("overlap_efficiency")
+            if (ob is not None and op is not None
+                    and op < ob * args.gate_overlap_margin):
+                fails.append(
+                    f"{r['name']}: pipelined overlap efficiency {op:.2f} "
+                    f"< {args.gate_overlap_margin:.2f}× batched baseline "
+                    f"{ob:.2f}")
     return fails
 
 
@@ -155,12 +202,20 @@ def main(argv=None) -> int:
     p.add_argument("--quick", action="store_true",
                    help="CI mode: small suite, fewer repeats")
     p.add_argument("--repeats", type=int, default=3)
-    p.add_argument("--backends", default="numpy,pallas,batched",
-                   help="comma-separated: numpy,pallas,batched")
+    p.add_argument("--backends", default="numpy,pallas,batched,pipelined",
+                   help="comma-separated: numpy,pallas,batched,pipelined")
     p.add_argument("--out", default="BENCH_solve.json")
     p.add_argument("--gate-residual-fp64", type=float, default=1e-10)
     p.add_argument("--gate-residual-refine", type=float, default=1e-6)
     p.add_argument("--gate-flop-ratio", type=float, default=6.0)
+    p.add_argument("--gate-pipelined-parity", type=float, default=1e-6,
+                   help="max relative solution drift pipelined vs batched")
+    # the pipelined backend defers every device wait to one drain, so its
+    # overlap efficiency should dominate batched's blocking loop; the
+    # margin < 1 absorbs scheduler jitter on tiny CI matrices
+    p.add_argument("--gate-overlap-margin", type=float, default=0.75,
+                   help="pipelined overlap efficiency must be ≥ margin × "
+                        "the batched baseline")
     p.add_argument("--no-gate", action="store_true")
     args = p.parse_args(argv)
     if args.quick:
@@ -197,6 +252,15 @@ def main(argv=None) -> int:
         sp = [r["speedup_batched_vs_pallas"] for r in wide]
         print(f"batched vs per-front pallas on ≥4-fronts/level matrices: "
               f"min {min(sp):.1f}×, mean {float(np.mean(sp)):.1f}×")
+    ov = [(r["backends"]["batched"].get("overlap_efficiency"),
+           r["backends"]["pipelined"].get("overlap_efficiency"))
+          for r in records
+          if "batched" in r["backends"] and "pipelined" in r["backends"]]
+    ov = [(b_, p_) for b_, p_ in ov if b_ is not None and p_ is not None]
+    if ov:
+        print(f"overlap efficiency (host-busy fraction): batched mean "
+              f"{float(np.mean([b_ for b_, _ in ov])):.2f}, pipelined mean "
+              f"{float(np.mean([p_ for _, p_ in ov])):.2f}")
 
     if not args.no_gate:
         fails = run_gates(records, args)

@@ -113,6 +113,22 @@ def render_server(host: str, port: int, show_all_metrics: bool) -> int:
         if k in s:
             print(f"  stage {stage:<7} p50 {s[k]:8.2f} ms   "
                   f"p99 {s[f'stage_{stage}_p99_ms']:8.2f} ms")
+    # numeric solve-stage breakdown (repro.core.plan.execute_plan mirrors
+    # its RequestContext spans into stage.* histograms): host assembly vs
+    # device-blocked time vs triangular sweeps
+    solve_stages = [st for st in ("permute", "factor", "factor.assemble",
+                                  "factor.device", "solve.sweep")
+                    if f"stage.{st}.p50" in m]
+    if solve_stages:
+        print("solve stages")
+        for st in solve_stages:
+            print(f"  {st:<16} p50 {m[f'stage.{st}.p50'] * 1e3:8.2f} ms   "
+                  f"p99 {m[f'stage.{st}.p99'] * 1e3:8.2f} ms   "
+                  f"n={int(m.get(f'stage.{st}.count', 0))}")
+        ov = m.get("solve.overlap_efficiency")
+        if ov is not None:
+            print(f"  overlap efficiency {ov:.2f} "
+                  f"(host-busy fraction of assembly + device wait)")
     print(f"queue       depth {s.get('queue_depth', 0)}"
           + (f" / max_queue {s.get('max_queue')}"
              if s.get("max_queue") else " (unbounded)")

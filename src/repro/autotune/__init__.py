@@ -7,9 +7,16 @@ Same supervised machinery (`repro.core.ml`), different domain: the training
 corpus is the dry-run artifact table (roofline terms + memory per plan),
 labels are the plan with the best dominant-term/residency trade-off per
 cell. See `plan_selector.PlanSelector`.
+
+`solve_tuner` is the measured (not learned) sibling for the numeric solve
+backends: per-device-kind search over the kernel block size and bucket pad
+policy, persisted under ``artifacts/autotune/``.
 """
 from .plan_selector import (CANDIDATE_PLANS, PlanSelector, plan_label,
                             workload_features)
+from .solve_tuner import (DEFAULT_AUTOTUNE_DIR, SolvePolicy, get_policy,
+                          load_policy, save_policy, tune)
 
 __all__ = ["CANDIDATE_PLANS", "PlanSelector", "plan_label",
-           "workload_features"]
+           "workload_features", "SolvePolicy", "DEFAULT_AUTOTUNE_DIR",
+           "get_policy", "load_policy", "save_policy", "tune"]

@@ -1,0 +1,226 @@
+"""Autotuned bucket/block policy for the numeric solve backends.
+
+The level-scheduled backends (``batched`` / ``pipelined``) have two
+device-dependent knobs:
+
+* ``bs`` — the panel-width cap of the batched partial-Cholesky kernel
+  (:func:`repro.kernels.ops.pick_block_size`): small blocks shorten the
+  sequential chol-tile critical path, big blocks keep the rank-``bs``
+  updates matmul-shaped.
+* ``pad`` — the schedule's bucket pad policy
+  (:data:`repro.sparse.schedule.PAD_POLICIES`): ``pow2`` minimizes the
+  number of compiled kernel shapes, ``mult8`` minimizes padded FLOPs.
+
+Neither has a device-independent best setting (compile cost vs wasted FLOPs
+vs MXU shape efficiency), so :func:`tune` *measures*: it times warm
+factorizations of a small representative suite over a candidate grid and
+persists the winner per **device kind** under ``artifacts/autotune/``
+(``solve_policy_<device-kind>.json``). Candidate ordering is seeded from
+``BENCH_solve.json`` roofline records when present — a suite whose measured
+bucket occupancy is already high gets the cheap ``pow2``-first ordering,
+a low-occupancy one tries ``mult8`` first.
+
+Cache invalidation: a persisted policy records the schema version, device
+kind, and backend it was tuned for; :func:`load_policy` rejects records
+that mismatch any of them (and malformed files), so a toolchain/device
+change simply re-tunes. Delete the JSON (or pass ``force=True`` to
+:func:`get_policy`) to re-measure on demand.
+
+The engine threads the policy through
+:class:`repro.engine.config.EngineConfig` (``autotune_solve`` /
+``autotune_dir``) into :func:`repro.core.plan.execute_plan`, which records
+the applied knobs in ``ExecutionPlan.meta["solve_bs"/"solve_pad"]`` — a
+cached plan always tells which policy last produced numbers from it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.sparse.schedule import PAD_POLICIES
+
+__all__ = ["SolvePolicy", "DEFAULT_AUTOTUNE_DIR", "device_kind",
+           "policy_path", "load_policy", "save_policy", "seed_order",
+           "tune", "get_policy"]
+
+SCHEMA = 1
+DEFAULT_AUTOTUNE_DIR = os.path.join("artifacts", "autotune")
+
+#: default candidate grid: panel-width caps × pad policies
+DEFAULT_BS_GRID: Tuple[Optional[int], ...] = (16, 32, 64)
+
+
+@dataclasses.dataclass(frozen=True)
+class SolvePolicy:
+    """One (device kind, backend)'s tuned bucket/block policy."""
+
+    bs: Optional[int] = None     # panel-width cap (None = kernel default)
+    pad: str = "pow2"            # bucket pad policy
+    device_kind: str = ""        # jax device kind the numbers came from
+    backend: str = "batched"     # backend the timing loop ran
+    warm_factor_s: float = 0.0   # best measured warm factor time (suite sum)
+    source: str = "default"      # "default" | "tuned" | "cached"
+
+    def to_json(self) -> dict:
+        return dict(schema=SCHEMA, **dataclasses.asdict(self))
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "SolvePolicy":
+        doc = {k: v for k, v in doc.items() if k != "schema"}
+        return cls(**doc)
+
+
+def device_kind() -> str:
+    """The accelerator kind policies are keyed by (e.g. ``cpu``,
+    ``TPU v4``)."""
+    import jax
+
+    return jax.devices()[0].device_kind
+
+
+def _slug(kind: str) -> str:
+    return re.sub(r"[^a-z0-9]+", "-", kind.lower()).strip("-") or "unknown"
+
+
+def policy_path(dirpath: str, kind: str) -> str:
+    return os.path.join(dirpath, f"solve_policy_{_slug(kind)}.json")
+
+
+def save_policy(policy: SolvePolicy,
+                dirpath: str = DEFAULT_AUTOTUNE_DIR) -> str:
+    os.makedirs(dirpath, exist_ok=True)
+    path = policy_path(dirpath, policy.device_kind)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(policy.to_json(), fh, indent=2)
+    os.replace(tmp, path)
+    return path
+
+
+def load_policy(dirpath: str, kind: str,
+                backend: Optional[str] = None) -> Optional[SolvePolicy]:
+    """The persisted policy for ``kind``, or None if absent/stale.
+
+    Stale = schema or device-kind mismatch, unknown pad policy, or (when
+    ``backend`` is given) a record tuned for a different backend — all
+    treated as a miss so the caller re-tunes rather than serving numbers
+    measured under different rules.
+    """
+    path = policy_path(dirpath, kind)
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError):
+        return None
+    if doc.get("schema") != SCHEMA or doc.get("device_kind") != kind:
+        return None
+    if doc.get("pad") not in PAD_POLICIES:
+        return None
+    if backend is not None and doc.get("backend") != backend:
+        return None
+    try:
+        return dataclasses.replace(SolvePolicy.from_json(doc),
+                                   source="cached")
+    except TypeError:
+        return None
+
+
+def seed_order(bench_path: str = "BENCH_solve.json",
+               pads: Sequence[str] = PAD_POLICIES) -> List[str]:
+    """Pad-policy candidate ordering seeded from benchmark rooflines.
+
+    ``BENCH_solve.json`` records the realized bucket occupancy per matrix.
+    When the suite's mean occupancy under the recorded (pow2) schedule is
+    already high, padding waste is not the bottleneck — try ``pow2`` first
+    and let the early-out keep tuning cheap. Low occupancy means measured
+    padded-FLOP waste — try ``mult8`` first. Without a benchmark file the
+    declared order stands.
+    """
+    pads = [p for p in pads if p in PAD_POLICIES]
+    try:
+        with open(bench_path) as fh:
+            doc = json.load(fh)
+        occ = [r["occupancy"] for r in doc.get("records", [])
+               if "occupancy" in r]
+        mean_occ = float(np.mean(occ)) if occ else 1.0
+    except (OSError, json.JSONDecodeError, KeyError):
+        return list(pads)
+    if mean_occ < 0.5 and "mult8" in pads:
+        return ["mult8"] + [p for p in pads if p != "mult8"]
+    return list(pads)
+
+
+def _default_suite():
+    from repro.sparse.dataset import block_arrow, grid2d
+
+    rng = np.random.default_rng(0)
+    return [grid2d(12, 12, "tune_grid"),
+            block_arrow(3, 20, 8, rng, "tune_arrow")]
+
+
+def tune(mats=None, *, backend: str = "pipelined",
+         bs_grid: Sequence[Optional[int]] = DEFAULT_BS_GRID,
+         pads: Optional[Sequence[str]] = None, repeats: int = 2,
+         bench_path: str = "BENCH_solve.json",
+         out_dir: Optional[str] = DEFAULT_AUTOTUNE_DIR) -> SolvePolicy:
+    """Measure the candidate grid and persist the winner for this device.
+
+    Per (pad, bs): one cold factorization (compile) then ``repeats`` warm
+    factorizations of every suite matrix; the score is the summed best warm
+    factor time. ``out_dir=None`` skips persistence (pure measurement).
+    """
+    from repro.sparse.multifrontal import factor_and_solve_timed
+    from repro.sparse.symbolic import symbolic_cholesky
+
+    if mats is None:
+        mats = _default_suite()
+    pads = seed_order(bench_path, PAD_POLICIES if pads is None else pads)
+    syms = [symbolic_cholesky(a) for a in mats]
+    kind = device_kind()
+    results: Dict[Tuple[str, Optional[int]], float] = {}
+    for pad in pads:
+        for bs in bs_grid:
+            total = 0.0
+            for a, sym in zip(mats, syms):
+                factor_and_solve_timed(a, sym=sym, backend=backend,
+                                       pad=pad, bs=bs)  # cold/compile
+                best = float("inf")
+                for _ in range(max(repeats, 1)):
+                    t0 = time.perf_counter()
+                    factor_and_solve_timed(a, sym=sym, backend=backend,
+                                           pad=pad, bs=bs)
+                    best = min(best, time.perf_counter() - t0)
+                total += best
+            results[(pad, bs)] = total
+    (pad, bs), t_best = min(results.items(), key=lambda kv: kv[1])
+    policy = SolvePolicy(bs=bs, pad=pad, device_kind=kind, backend=backend,
+                         warm_factor_s=t_best, source="tuned")
+    if out_dir:
+        save_policy(policy, out_dir)
+    return policy
+
+
+def get_policy(dirpath: str = DEFAULT_AUTOTUNE_DIR, *,
+               backend: str = "pipelined", autotune: bool = False,
+               force: bool = False, **tune_kwargs) -> SolvePolicy:
+    """The policy the engine should apply: cached > (re)tuned > default.
+
+    ``autotune=False`` never measures — it returns the persisted policy if
+    one is valid for this device/backend, else the conservative default
+    (``bs=None``, ``pad="pow2"``). ``autotune=True`` tunes on a cache miss;
+    ``force=True`` ignores the cache and re-measures.
+    """
+    kind = device_kind()
+    if not force:
+        cached = load_policy(dirpath, kind, backend=backend)
+        if cached is not None:
+            return cached
+    if autotune:
+        return tune(backend=backend, out_dir=dirpath, **tune_kwargs)
+    return SolvePolicy(device_kind=kind, backend=backend, source="default")

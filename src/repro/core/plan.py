@@ -32,7 +32,7 @@ from repro.sparse.csr import CSRMatrix, permute_symmetric
 from repro.sparse.reorder import get_reordering
 from repro.sparse.symbolic import SymbolicFactor, symbolic_cholesky
 
-__all__ = ["ExecutionPlan", "PlanBuilder", "execute_plan"]
+__all__ = ["ExecutionPlan", "PlanBuilder", "execute_plan", "SOLVE_STAGES"]
 
 
 @dataclasses.dataclass
@@ -216,28 +216,45 @@ class PlanBuilder:
         return s
 
 
+#: solve-stage names as they appear in RequestContext spans and in the
+#: metrics registry (``stage.<name>`` histograms, seconds)
+SOLVE_STAGES = ("permute", "factor", "factor.assemble", "factor.device",
+                "solve", "solve.sweep")
+
+
 def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
                  b: Optional[np.ndarray] = None, *,
                  solver: str = "multifrontal",
                  backend: str = "numpy",
                  solve_dtype: str = "fp64",
-                 ctx: Optional[RequestContext] = None) -> dict:
+                 pad: str = "pow2",
+                 bs: Optional[int] = None,
+                 ctx: Optional[RequestContext] = None,
+                 metrics=None) -> dict:
     """Numeric factor + solve of ``A x = b`` driven entirely by the plan.
 
     The only structure work left is applying the stored permutation; the
     symbolic factor is consumed as-is by the solver (no ``etree`` /
     ``column_counts`` / pattern recomputation — the warm-path guarantee).
     ``backend`` picks the front-math substrate (``numpy`` / per-front
-    ``pallas`` / level-scheduled ``batched``) and ``solve_dtype`` the
-    precision mode: ``fp64``, ``fp32``, or ``fp32_refine`` (fp32
-    factorization + fp64 iterative refinement). The f32-only ``batched`` /
-    ``pallas`` backends auto-promote ``fp64`` to ``fp32_refine`` so the
-    residual still reaches the fp64 floor. The effective backend/precision
-    are recorded both in the result dict and in ``plan.meta`` — a cached
-    plan always tells which numeric path last produced results from it.
-    Returns the timing/residual dict the benchmarks report. A
-    :class:`RequestContext` gets ``permute``/``factor``/``solve`` spans —
-    the numeric tail of the same request the planning spine timed.
+    ``pallas`` / level-scheduled ``batched`` / async ``pipelined``) and
+    ``solve_dtype`` the precision mode: ``fp64``, ``fp32``, or
+    ``fp32_refine`` (fp32 factorization + fp64 iterative refinement). The
+    f32-only device backends auto-promote ``fp64`` to ``fp32_refine`` so
+    the residual still reaches the fp64 floor. ``pad``/``bs`` are the
+    autotuned bucket/block policy (:mod:`repro.autotune.solve_tuner`);
+    both the effective backend/precision and the applied policy are
+    recorded in the result dict and in ``plan.meta`` (``solve_bs`` /
+    ``solve_pad``) — a cached plan always tells which numeric path and
+    policy last produced results from it.
+
+    A :class:`RequestContext` gets ``permute``/``factor``/``solve`` spans
+    plus the solve-stage breakdown ``factor.assemble`` / ``factor.device``
+    / ``solve.sweep`` (host assembly vs device-blocked vs triangular
+    sweeps) on the level-scheduled backends; a
+    :class:`repro.core.metrics.MetricsRegistry` passed as ``metrics``
+    mirrors every span into ``stage.<name>`` histograms and records the
+    backend's ``solve.overlap_efficiency`` gauge.
     """
     assert a.data is not None, "numeric execution needs values"
     if solve_dtype not in ("fp64", "fp32", "fp32_refine"):
@@ -251,15 +268,18 @@ def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
 
     refine_info = None
     eff_dtype = solve_dtype
+    fstats: dict = {}
     t0 = time.perf_counter()
     if solver == "multifrontal":
         from repro.sparse.multifrontal import (multifrontal_cholesky,
                                                multifrontal_solve)
-        if backend in ("pallas", "batched") and solve_dtype == "fp64":
+        if (backend in ("pallas", "batched", "pipelined")
+                and solve_dtype == "fp64"):
             eff_dtype = "fp32_refine"  # these backends factor in f32
         dtype = np.float64 if eff_dtype == "fp64" else np.float32
         f = multifrontal_cholesky(pa, sym=plan.sym, backend=backend,
-                                  dtype=dtype)
+                                  dtype=dtype, pad=pad, bs=bs)
+        fstats = f.stats
         t_fac = time.perf_counter() - t0
         t0 = time.perf_counter()
         pb = b[perm]
@@ -280,20 +300,38 @@ def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
         raise ValueError(f"unknown solver {solver!r}")
     t_sol = time.perf_counter() - t0
 
+    # solve-stage breakdown: host assembly vs device-blocked time comes
+    # from the backend's own timers; the triangular sweeps are the whole
+    # of t_sol on the non-refined path and dominated by it otherwise
+    spans = {"permute": t_perm, "factor": t_fac, "solve": t_sol,
+             "solve.sweep": t_sol}
+    if "t_factor_assemble" in fstats:
+        spans["factor.assemble"] = fstats["t_factor_assemble"]
+        spans["factor.device"] = (fstats.get("t_factor_dispatch", 0.0)
+                                  + fstats.get("t_factor_sync", 0.0))
     if ctx is not None:
-        ctx.add_span("permute", t_perm)
-        ctx.add_span("factor", t_fac)
-        ctx.add_span("solve", t_sol)
+        for stage, dt in spans.items():
+            ctx.add_span(stage, dt)
+    if metrics is not None:
+        for stage, dt in spans.items():
+            metrics.histogram(f"stage.{stage}").observe(dt)
+        if "overlap_efficiency" in fstats:
+            metrics.gauge("solve.overlap_efficiency").set(
+                fstats["overlap_efficiency"])
+        metrics.counter("solve.requests").inc()
     x = np.empty_like(z)
     x[perm] = z
     resid = float(np.linalg.norm(a.matvec(x) - b)
                   / max(np.linalg.norm(b), 1e-30))
     plan.meta["solve_backend"] = backend
     plan.meta["solve_dtype"] = eff_dtype
+    plan.meta["solve_bs"] = bs
+    plan.meta["solve_pad"] = pad
     return dict(x=x, time=t_perm + t_fac + t_sol, t_permute=t_perm,
                 t_factor=t_fac, t_solve=t_sol, residual=resid,
                 algorithm=plan.algorithm, solver=solver,
-                backend=backend, solve_dtype=eff_dtype,
+                backend=backend, solve_dtype=eff_dtype, bs=bs, pad=pad,
+                overlap_efficiency=fstats.get("overlap_efficiency"),
                 refine_iterations=(None if refine_info is None
                                    else refine_info.iterations),
                 refine_converged=(None if refine_info is None

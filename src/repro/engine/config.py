@@ -2,6 +2,8 @@
 from __future__ import annotations
 
 import dataclasses
+import os
+import warnings
 from typing import Optional, Sequence
 
 from repro.core.plan_cache import DEFAULT_CACHE_DIR
@@ -67,13 +69,21 @@ class EngineConfig:
 
     # numeric solve: backend picks the front-math substrate ("numpy" host
     # BLAS, "pallas" per-front kernels, "batched" level-scheduled batched
-    # kernels — see repro.sparse.schedule); solve_dtype picks the precision
-    # mode ("fp64", "fp32", or "fp32_refine" = fp32 factorization + fp64
-    # iterative refinement; the f32-only pallas/batched backends promote
-    # "fp64" to "fp32_refine" automatically)
+    # kernels, "pipelined" level-scheduled with async dispatch + on-device
+    # extend-add — see repro.sparse.schedule / .multifrontal); solve_dtype
+    # picks the precision mode ("fp64", "fp32", or "fp32_refine" = fp32
+    # factorization + fp64 iterative refinement; the f32-only device
+    # backends promote "fp64" to "fp32_refine" automatically, with a
+    # warning at config time so the promotion is never silent)
     solver: str = "multifrontal"  # or "simplicial"
     backend: str = "numpy"
     solve_dtype: str = "fp64"
+    # autotuned bucket/block policy (repro.autotune.solve_tuner): when
+    # autotune_solve is True the engine loads (or measures, on first use)
+    # the per-device-kind SolvePolicy from autotune_dir and threads its
+    # bs/pad through execute_plan; False leaves the kernel defaults
+    autotune_solve: bool = False
+    autotune_dir: str = os.path.join("artifacts", "autotune")
 
     # training
     fast_grids: bool = False
@@ -85,9 +95,17 @@ class EngineConfig:
         if self.path not in ("host", "device"):
             raise ValueError(f"path must be 'host' or 'device', "
                              f"got {self.path!r}")
-        if self.backend not in ("numpy", "pallas", "batched"):
-            raise ValueError(f"backend must be 'numpy', 'pallas' or "
-                             f"'batched', got {self.backend!r}")
+        if self.backend not in ("numpy", "pallas", "batched", "pipelined"):
+            raise ValueError(f"backend must be 'numpy', 'pallas', 'batched' "
+                             f"or 'pipelined', got {self.backend!r}")
         if self.solve_dtype not in ("fp64", "fp32", "fp32_refine"):
             raise ValueError(f"solve_dtype must be 'fp64', 'fp32' or "
                              f"'fp32_refine', got {self.solve_dtype!r}")
+        if (self.solve_dtype == "fp64"
+                and self.backend in ("pallas", "batched", "pipelined")):
+            warnings.warn(
+                f"backend {self.backend!r} factors in fp32; solve_dtype "
+                f"'fp64' will run as 'fp32_refine' (fp32 factorization + "
+                f"fp64 iterative refinement). Set solve_dtype="
+                f"'fp32_refine' explicitly to silence this.",
+                UserWarning, stacklevel=2)

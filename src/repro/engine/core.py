@@ -62,6 +62,7 @@ class SolverEngine:
         self._fingerprint: Optional[str] = None
         self._builder = None
         self._metrics = None  # lazily built (sink config lives on config)
+        self._solve_policy = None  # lazily resolved (may autotune once)
         self.last_report: Optional[Dict[str, Any]] = None
         # dataset provenance of the last train() — persisted into bundle
         # schema v2 by save() (None for attach()/load()-built engines)
@@ -218,23 +219,48 @@ class SolverEngine:
         return self._get_builder().plan_batch(mats)
 
     # -- solving -------------------------------------------------------------
+    @property
+    def solve_policy(self):
+        """The :class:`repro.autotune.solve_tuner.SolvePolicy` this engine
+        applies to the numeric backends. With ``autotune_solve`` off this
+        is the conservative default (kernel defaults, pow2 padding) unless
+        a tuned record for this device kind is already persisted in
+        ``autotune_dir``; with it on, the first access runs the tuner once
+        (persisting the result) and every later engine just loads it."""
+        if self._solve_policy is None:
+            from repro.autotune.solve_tuner import get_policy
+
+            cfg = self.config
+            self._solve_policy = get_policy(
+                cfg.autotune_dir, backend=cfg.backend,
+                autotune=cfg.autotune_solve)
+        return self._solve_policy
+
+    def _solve_kwargs(self) -> Dict[str, Any]:
+        cfg = self.config
+        pol = self.solve_policy
+        return dict(solver=cfg.solver, backend=cfg.backend,
+                    solve_dtype=cfg.solve_dtype, pad=pol.pad, bs=pol.bs,
+                    metrics=self.metrics)
+
     def solve(self, a, b: Optional[np.ndarray] = None,
               ctx=None) -> Dict[str, Any]:
         """Plan (cached) + numeric factor + solve; returns the result dict
         of :func:`repro.core.plan.execute_plan` (x, timings, residual).
         One :class:`RequestContext` spans planning *and* the numeric tail,
         so the result carries the request id and ``ctx.spans`` tells the
-        whole story (cache → … → factor → solve)."""
+        whole story (cache → … → factor.assemble/factor.device → solve);
+        the same spans land in the engine metrics as ``stage.*``
+        histograms. The tuned solve policy (``solve_policy``) supplies the
+        bucket pad and kernel block knobs."""
         from repro.core.plan import execute_plan
         from repro.core.reqctx import RequestContext
 
         if ctx is None:
             ctx = RequestContext.mint(
                 deadline_ms=self.config.default_deadline_ms)
-        return execute_plan(a, self.plan(a, ctx=ctx), b,
-                            solver=self.config.solver,
-                            backend=self.config.backend,
-                            solve_dtype=self.config.solve_dtype, ctx=ctx)
+        return execute_plan(a, self.plan(a, ctx=ctx), b, ctx=ctx,
+                            **self._solve_kwargs())
 
     def solve_batch(self, mats: Sequence,
                     bs: Optional[Sequence[Optional[np.ndarray]]] = None
@@ -244,9 +270,8 @@ class SolverEngine:
 
         if bs is None:
             bs = [None] * len(mats)
-        return [execute_plan(a, p, b, solver=self.config.solver,
-                             backend=self.config.backend,
-                             solve_dtype=self.config.solve_dtype)
+        kw = self._solve_kwargs()
+        return [execute_plan(a, p, b, **kw)
                 for a, p, b in zip(mats, plans, bs)]
 
     # -- serving -------------------------------------------------------------

@@ -19,6 +19,17 @@ Pallas kernels over 128-aligned VMEM tiles:
                       fused, f32 accumulate) entirely in VMEM. One launch
                       factors every same-shape front of an assembly-tree
                       level — no per-front host round trips.
+* ``extend_add_batch`` — the on-device extend-add: accumulates a stack of
+                      child Schur update blocks into parent front workspaces
+                      from a precomputed row map. The irregular scatter is
+                      expressed as two MXU matmuls per child (``Eᵀ U E``
+                      with a one-hot embedding ``E`` built in-kernel from
+                      the row map), the destination slot is a scalar-prefetch
+                      index driving the output BlockSpec, and the workspace
+                      stack is aliased in/out so sequential grid steps
+                      accumulate. This is what lets the ``pipelined``
+                      backend keep update matrices device-resident between
+                      assembly-tree levels.
 
 This is the TPU-native adaptation of the paper's MUMPS substrate: the
 irregular sparse assembly stays on the host, the dense front math is
@@ -33,7 +44,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["chol_tile", "tri_inv_tile", "matmul_nt", "frontal_factor_batch"]
+__all__ = ["chol_tile", "tri_inv_tile", "matmul_nt", "frontal_factor_batch",
+           "extend_add_batch"]
 
 
 # ---------------------------------------------------------------------------
@@ -200,6 +212,68 @@ def _frontal_batch_kernel(f_ref, o_ref, *, npanels: int, bs: int):
             preferred_element_type=jnp.float32)
         W = jax.lax.dynamic_update_slice(W, trail, (lo + bs, lo + bs))
     o_ref[...] = W[None].astype(o_ref.dtype)
+
+
+def _extend_add_kernel(dst_ref, u_ref, rows_ref, w_ref, o_ref):
+    """Accumulate one child update into its parent front workspace.
+
+    The scatter ``W[rows, rows] += U`` is recast as ``W += Eᵀ U E`` with
+    ``E[i, j] = (rows[i] == j)`` — two matmuls, no gather/scatter lowering
+    needed. Row-map entries of ``-1`` (child padding, or a padded
+    contribution slot) produce an all-zero one-hot row, so they contribute
+    nothing. ``o_ref`` aliases the workspace stack; the TPU grid is
+    sequential, so contributions sorted by destination slot accumulate
+    (equal slots stay VMEM-resident between consecutive steps).
+    """
+    del w_ref  # aliased with o_ref — the accumulation target
+    U = u_ref[...][0].astype(jnp.float32)             # (R, R)
+    rows = rows_ref[...][0]                           # (R,) int32
+    R = U.shape[0]
+    M = o_ref.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (R, M), 1)
+    E = (rows[:, None] == iota).astype(jnp.float32)   # (R, M) one-hot
+    UE = jax.lax.dot_general(U, E, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    contrib = jax.lax.dot_general(E, UE, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    o_ref[...] += contrib[None].astype(o_ref.dtype)
+
+
+def extend_add_batch(w: jax.Array, u: jax.Array, dst: jax.Array,
+                     rows: jax.Array, *, interpret: bool = False
+                     ) -> jax.Array:
+    """On-device extend-add: scatter-accumulate child Schur updates into
+    parent front workspaces.
+
+    ``w``: (B, M, M) f32 parent workspaces (host-scattered A entries +
+    identity pads). ``u``: (C, R, R) f32 child update blocks (typically the
+    trailing Schur block of a previously factored, still device-resident
+    bucket). ``dst``: (C,) int32 destination batch slot per child, sorted
+    ascending (the accumulation-ordering contract). ``rows``: (C, R) int32
+    local row positions in the (padded) parent front; ``-1`` marks inactive
+    rows. Returns the updated workspace stack (``w`` is consumed via
+    aliasing).
+    """
+    B, M, M2 = w.shape
+    C, R, R2 = u.shape
+    assert M == M2 and R == R2 and dst.shape == (C,) and rows.shape == (C, R)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1, R, R), lambda c, dst: (c, 0, 0)),
+            pl.BlockSpec((1, R), lambda c, dst: (c, 0)),
+            pl.BlockSpec((1, M, M), lambda c, dst: (dst[c], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, M, M), lambda c, dst: (dst[c], 0, 0)),
+    )
+    return pl.pallas_call(
+        _extend_add_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, M, M), w.dtype),
+        input_output_aliases={3: 0},  # w (4th operand incl. prefetch) → out
+        interpret=interpret,
+    )(dst, u, rows, w)
 
 
 def frontal_factor_batch(w: jax.Array, npiv: int, *, bs: int,

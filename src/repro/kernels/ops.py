@@ -19,13 +19,15 @@ import numpy as np
 
 from . import ref
 from .flash_attention import flash_attention
-from .frontal_cholesky import (chol_tile, frontal_factor_batch as
-                               _frontal_factor_batch_kernel, matmul_nt,
+from .frontal_cholesky import (chol_tile, extend_add_batch as
+                               _extend_add_batch_kernel, frontal_factor_batch
+                               as _frontal_factor_batch_kernel, matmul_nt,
                                tri_inv_tile)
 from .spmv_bell import bell_spmv, csr_to_bell
 
 __all__ = ["attention", "frontal_factor", "frontal_factor_batch",
-           "frontal_factor_batch_ws", "spmv", "matmul_nt_padded"]
+           "frontal_factor_batch_ws", "extend_add_batch", "pick_block_size",
+           "spmv", "matmul_nt_padded"]
 
 
 def _interpret() -> bool:
@@ -137,11 +139,24 @@ def _factor_batch_ws_jit(w, npiv, bs, interpret):
     return _frontal_factor_batch_kernel(w, npiv, bs=bs, interpret=interpret)
 
 
-def _batch_block(npiv: int) -> int:
-    """Panel width for a bucket: npiv is a power of two ≥ 8, so min(32, npiv)
-    always divides it. 32 keeps the sequential chol-tile loop short while
-    the rank-bs updates stay matmul-shaped."""
-    return min(32, npiv)
+def pick_block_size(npiv: int, bs: int | None = None) -> int:
+    """Largest panel width ≤ ``bs`` (default 32) that divides ``npiv``.
+
+    Bucketed pivot dims are multiples of 8 (pow2 ≥ 8 under the default pad
+    policy, next-multiple-of-8 under ``mult8``), so the descent over
+    divisors terminates at 8 at the latest; tiny fronts (npiv < 8) run
+    unblocked. 32 keeps the sequential chol-tile loop short while the
+    rank-bs updates stay matmul-shaped."""
+    cap = 32 if bs is None else max(1, int(bs))
+    if npiv <= cap:
+        return npiv
+    for cand in range(cap, 0, -1):
+        if npiv % cand == 0:
+            return cand
+    return npiv
+
+
+_batch_block = pick_block_size  # back-compat alias
 
 
 def frontal_factor_batch_ws(w: jax.Array, npiv: int, *,
@@ -150,12 +165,40 @@ def frontal_factor_batch_ws(w: jax.Array, npiv: int, *,
     every (M, M) front workspace in the (B, M, M) stack ``w`` in ONE kernel
     launch (grid over B). Calls jit-cache per (B, M, npiv, bs) — bucketed
     shapes are powers of two, so a handful of compilations cover a whole
-    factorization. Returns the factored workspaces (see
+    factorization. ``bs`` is a *cap* on the panel width (the autotuned
+    policy knob); the effective width is the largest divisor of ``npiv``
+    not exceeding it. Returns the factored workspaces (see
     :func:`repro.kernels.frontal_cholesky.frontal_factor_batch`)."""
-    if bs is None:
-        bs = _batch_block(npiv)
+    bs = pick_block_size(npiv, bs)
     return _factor_batch_ws_jit(jnp.asarray(w, jnp.float32), npiv, bs,
                                 _interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _extend_add_jit(w, u, dst, rows, interpret):
+    return _extend_add_batch_kernel(w, u, dst, rows, interpret=interpret)
+
+
+# donation realizes the kernel-level workspace aliasing as a true in-place
+# update on TPU; CPU (interpret/test) has no donation support and would
+# warn on every compile, so it gets the plain variant
+_extend_add_jit_donated = jax.jit(_extend_add_jit.__wrapped__,
+                                  static_argnames=("interpret",),
+                                  donate_argnums=(0,))
+
+
+def extend_add_batch(w: jax.Array, u: jax.Array, dst, rows) -> jax.Array:
+    """On-device extend-add (see
+    :func:`repro.kernels.frontal_cholesky.extend_add_batch`): accumulate the
+    child update stack ``u`` (C, R, R) into the parent workspace stack ``w``
+    (B, M, M) at slots ``dst`` (sorted ascending) and local rows ``rows``
+    (-1 = inactive). ``w`` is donated on TPU — callers must treat it as
+    consumed. Calls jit-cache per (B, M, C, R) shape."""
+    interp = _interpret()
+    fn = _extend_add_jit if interp else _extend_add_jit_donated
+    return fn(jnp.asarray(w, jnp.float32), jnp.asarray(u, jnp.float32),
+              jnp.asarray(dst, jnp.int32), jnp.asarray(rows, jnp.int32),
+              interp)
 
 
 def frontal_factor_batch(fs: jax.Array, npiv: int, *, bs: int | None = None

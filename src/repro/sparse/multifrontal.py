@@ -5,7 +5,7 @@ a traversal of an assembly tree whose nodes are **dense frontal matrices**.
 This is the TPU-native re-think of the paper's solver substrate: the
 irregular sparsity is confined to host-side assembly (vectorized
 scatter/extend-add index maps), while all heavy FLOPs are dense partial
-factorizations of fronts — matmul-shaped work for the MXU. Three backends:
+factorizations of fronts — matmul-shaped work for the MXU. Four backends:
 
 * ``numpy``   — host BLAS, front-at-a-time; used for dataset labeling
                 wall-times and as the fp64 correctness reference.
@@ -18,6 +18,18 @@ factorizations of fronts — matmul-shaped work for the MXU. Three backends:
                 (grid over the batch dim, fused chol → tri-solve → Schur
                 per front, f32 accumulate). nsup host round-trips become
                 nlevels × nbuckets kernel calls.
+* ``pipelined`` — **device-resident producer/consumer**: the host only ever
+                scatters A's entries into fresh workspaces (the cheap,
+                irregular part); the extend-add runs on device
+                (:func:`repro.kernels.ops.extend_add_batch`), so Schur
+                updates never round-trip through numpy between levels.
+                Kernel launches are dispatched asynchronously and the host
+                races ahead assembling the next level's buckets while the
+                previous level factors — the only host↔device sync is one
+                drain at the end. ``stats`` records where the wall time
+                went (``t_factor_assemble`` / ``t_factor_dispatch`` /
+                ``t_factor_sync``) and the resulting ``overlap_efficiency``
+                (host-busy fraction of the overlappable time).
 
 The triangular solves are level-batched too: :func:`multifrontal_solve`
 stacks each level's factors into (B, P, P)/(B, R, P) tensors once and runs
@@ -44,7 +56,10 @@ from .symbolic import SymbolicFactor, supernodes, symbolic_cholesky
 __all__ = ["MultifrontalFactor", "multifrontal_cholesky", "multifrontal_solve",
            "factor_and_solve_timed"]
 
-Backend = Literal["numpy", "pallas", "batched"]
+Backend = Literal["numpy", "pallas", "batched", "pipelined"]
+
+#: backends that factor fronts in f32 on device
+DEVICE_BACKENDS = ("pallas", "batched", "pipelined")
 
 
 @dataclasses.dataclass
@@ -139,25 +154,32 @@ def multifrontal_cholesky(
     relax: int = 8,
     backend: Backend = "numpy",
     dtype: np.dtype | type = np.float64,
+    pad: str = "pow2",
+    bs: Optional[int] = None,
 ) -> MultifrontalFactor:
     """Numeric supernodal factorization of an SPD CSR matrix.
 
     ``dtype`` selects the front-math precision on the ``numpy`` backend
-    (fp64 or fp32); the ``pallas``/``batched`` backends always accumulate in
-    f32 (pair them with :mod:`repro.sparse.refine` to recover fp64-level
-    residuals). The returned factor carries the :class:`LevelSchedule` used,
-    so :func:`multifrontal_solve` can run level-batched sweeps.
+    (fp64 or fp32); the device backends always accumulate in f32 (pair them
+    with :mod:`repro.sparse.refine` to recover fp64-level residuals).
+    ``pad`` and ``bs`` are the autotuned kernel-policy knobs: the bucket
+    pad policy of the level schedule (``"pow2"`` / ``"mult8"``) and the
+    panel block-size cap of the batched kernels (None → 32). The returned
+    factor carries the :class:`LevelSchedule` used, so
+    :func:`multifrontal_solve` can run level-batched sweeps.
     """
     assert a.data is not None, "numeric factorization needs values"
     if sym is None:
         sym = symbolic_cholesky(a)
     snode_ptr, snode_of = supernodes(sym, relax=relax)
-    schedule = build_schedule(sym, snode_ptr, snode_of)
-    eff_dtype = np.dtype(np.float32 if backend in ("pallas", "batched")
-                         else dtype)
+    schedule = build_schedule(sym, snode_ptr, snode_of, pad=pad)
+    eff_dtype = np.dtype(np.float32 if backend in DEVICE_BACKENDS else dtype)
 
+    timings: dict = {}
     if backend == "batched":
-        fronts = _factor_batched(a, schedule)
+        fronts, timings = _factor_batched(a, schedule, bs=bs)
+    elif backend == "pipelined":
+        fronts, timings = _factor_pipelined(a, schedule, bs=bs)
     else:
         fronts = _factor_sequential(a, schedule, backend, eff_dtype)
 
@@ -165,7 +187,7 @@ def multifrontal_cholesky(
     stats.update(n=a.n,
                  peak_front=max((fp.m for fp in schedule.fronts), default=0),
                  nnz_L=sym.nnz_L, fill=sym.fill, sym_flops=sym.flops,
-                 backend=backend, dtype=str(eff_dtype))
+                 backend=backend, dtype=str(eff_dtype), bs=bs, **timings)
     return MultifrontalFactor(a.n, fronts, sym, stats, schedule=schedule,
                               dtype=eff_dtype)
 
@@ -191,32 +213,73 @@ def _factor_sequential(a: CSRMatrix, schedule: LevelSchedule,
     return fronts
 
 
-def _factor_batched(a: CSRMatrix, schedule: LevelSchedule) -> List[_Front]:
+def _overlap_timings(t_assemble: float, t_dispatch: float,
+                     t_sync: float) -> dict:
+    """Solve-stage timing record shared by the batched/pipelined backends.
+
+    ``overlap_efficiency`` is the host-busy fraction of the overlappable
+    time — assembly seconds over assembly + device-blocked seconds. A
+    backend that hides its device waits under host assembly (the pipelined
+    producer/consumer loop) pushes it toward 1; a backend that blocks on
+    every kernel call (batched) is bounded by how its per-bucket assembly
+    and kernel times happen to interleave.
+    """
+    denom = t_assemble + t_sync
+    return dict(t_factor_assemble=t_assemble, t_factor_dispatch=t_dispatch,
+                t_factor_sync=t_sync,
+                overlap_efficiency=(t_assemble / denom) if denom > 0 else 1.0)
+
+
+def _assemble_bucket(a: CSRMatrix, schedule: LevelSchedule,
+                     bucket) -> np.ndarray:
+    """Host side of one bucket's assembly: fresh padded f32 workspace stack
+    with identity pivot-pad columns and A's entries scattered in. Pivot
+    padding columns are decoupled identity columns; update-row padding is
+    zero rows — both factor trivially and contribute nothing to L or the
+    Schur complements."""
+    B, P, M = len(bucket.members), bucket.P, bucket.M
+    W = np.zeros((B, M, M), dtype=np.float32)
+    for bi, k in enumerate(bucket.members):
+        fp = schedule.fronts[k]
+        shift = P - fp.npiv
+        if shift:
+            pad = np.arange(fp.npiv, P)
+            W[bi, pad, pad] = 1.0
+        _scatter_entries(W[bi], a, fp, shift)
+    return W
+
+
+def _factor_batched(a: CSRMatrix, schedule: LevelSchedule,
+                    bs: Optional[int] = None
+                    ) -> Tuple[List[_Front], dict]:
     """Level-scheduled factorization: per (level, bucket), assemble every
     member front into one padded f32 workspace stack and factor the stack
-    in a single batched kernel launch. Pivot padding columns are decoupled
-    identity columns; update-row padding is zero rows — both factor
-    trivially and contribute nothing to L or the Schur complements."""
+    in a single batched kernel launch. Extend-add runs on the host (numpy
+    scatter into the next level's workspaces) and every kernel call is a
+    blocking round trip — the ``pipelined`` backend removes both."""
     from repro.kernels import ops
 
+    pc = time.perf_counter
     nsup = schedule.nsup
     fronts: List[Optional[_Front]] = [None] * nsup
     pending: List[List[Tuple[np.ndarray, np.ndarray]]] = [[] for _ in range(nsup)]
+    t_asm = t_sync = 0.0
     for li in range(schedule.nlevels):
         for bucket in schedule.buckets[li]:
-            B, P, M = len(bucket.members), bucket.P, bucket.M
-            W = np.zeros((B, M, M), dtype=np.float32)
+            t0 = pc()
+            P = bucket.P
+            W = _assemble_bucket(a, schedule, bucket)
             for bi, k in enumerate(bucket.members):
                 fp = schedule.fronts[k]
                 shift = P - fp.npiv
-                if shift:
-                    pad = np.arange(fp.npiv, P)
-                    W[bi, pad, pad] = 1.0
-                _scatter_entries(W[bi], a, fp, shift)
                 for (urows, U) in pending[k]:
                     _extend_add(W[bi], fp, urows, U, shift)
                 pending[k] = []
-            Wf = np.asarray(ops.frontal_factor_batch_ws(W, P))
+            t_asm += pc() - t0
+            t0 = pc()
+            Wf = np.asarray(ops.frontal_factor_batch_ws(W, P, bs=bs))
+            t_sync += pc() - t0
+            t0 = pc()
             for bi, k in enumerate(bucket.members):
                 fp = schedule.fronts[k]
                 npiv, nrest = fp.npiv, fp.nrest
@@ -226,7 +289,127 @@ def _factor_batched(a: CSRMatrix, schedule: LevelSchedule) -> List[_Front]:
                 if nrest:
                     S = Wf[bi, P : P + nrest, P : P + nrest]
                     pending[fp.parent].append((fp.rows[npiv:], S))
-    return fronts  # type: ignore[return-value]
+            t_asm += pc() - t0
+    return fronts, _overlap_timings(t_asm, 0.0, t_sync)  # type: ignore[return-value]
+
+
+def _route_contributions(schedule: LevelSchedule) -> dict:
+    """Precompute the device extend-add routing from the schedule alone.
+
+    Returns ``{(dst_level, dst_bucket): {(src_level, src_bucket):
+    [(src_slot, dst_slot, rowmap), ...]}}`` where ``rowmap`` maps the
+    source bucket's (padded) update rows to local positions in the padded
+    destination workspace (−1 = inactive pad row). Grouping by source
+    bucket makes every group one uniform-shape kernel launch.
+    """
+    loc = {}
+    for li in range(schedule.nlevels):
+        for bj, bucket in enumerate(schedule.buckets[li]):
+            for bi, k in enumerate(bucket.members):
+                loc[k] = (li, bj, bi)
+    routes: dict = {}
+    for fp in schedule.fronts:
+        if fp.parent < 0 or fp.nrest == 0:
+            continue
+        sli, sbj, sbi = loc[fp.k]
+        dli, dbj, dbi = loc[fp.parent]
+        pfp = schedule.fronts[fp.parent]
+        urows = fp.rows[fp.npiv :]
+        idx = np.searchsorted(pfp.rows, urows)
+        if idx.size and (idx[-1] >= pfp.rows.size
+                         or not np.array_equal(pfp.rows[idx], urows)):
+            raise RuntimeError(
+                "assembly-tree containment violated (supernode "
+                f"{fp.k}: update rows not a subset of front rows)")
+        shift = schedule.buckets[dli][dbj].P - pfp.npiv
+        if shift:
+            idx = np.where(idx >= pfp.npiv, idx + shift, idx)
+        rowmap = np.full(schedule.buckets[sli][sbj].R, -1, dtype=np.int32)
+        rowmap[: fp.nrest] = idx
+        (routes.setdefault((dli, dbj), {})
+               .setdefault((sli, sbj), []).append((sbi, dbi, rowmap)))
+    return routes
+
+
+def _pad_pow2(n: int) -> int:
+    return 1 << (int(n) - 1).bit_length() if n > 1 else 1
+
+
+def _factor_pipelined(a: CSRMatrix, schedule: LevelSchedule,
+                      bs: Optional[int] = None
+                      ) -> Tuple[List[_Front], dict]:
+    """Pipelined device-resident factorization.
+
+    Producer/consumer split: the host's only numeric work is scattering A's
+    entries into fresh bucket workspaces (sparse, cheap); the extend-add
+    and the partial factorization both run on device, dispatched
+    asynchronously. JAX's async dispatch queues the level-*k* kernels and
+    returns immediately, so the host assembles level *k+1* while the device
+    factors level *k* — host work hides under kernel time. Schur updates
+    stay device-resident between levels (each factored bucket stack is kept
+    on device until its members' parents have consumed it via
+    :func:`repro.kernels.ops.extend_add_batch`); the single blocking sync
+    is the drain at the end that fetches the factored stacks for the
+    host-side triangular sweeps.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    pc = time.perf_counter
+    nsup = schedule.nsup
+    fronts: List[Optional[_Front]] = [None] * nsup
+    routes = _route_contributions(schedule)
+    dev: dict = {}             # (level, bucket) -> factored device stack
+    t_asm = t_disp = t_sync = 0.0
+    for li in range(schedule.nlevels):
+        for bj, bucket in enumerate(schedule.buckets[li]):
+            t0 = pc()
+            W = _assemble_bucket(a, schedule, bucket)
+            t_asm += pc() - t0
+            t0 = pc()
+            w = jnp.asarray(W)
+            for (sli, sbj), contribs in sorted(
+                    routes.get((li, bj), {}).items()):
+                # sorted destination slots: the kernel's sequential
+                # accumulation contract (equal slots stay VMEM-resident)
+                contribs.sort(key=lambda c: c[1])
+                src = np.array([c[0] for c in contribs], dtype=np.int32)
+                dst = np.array([c[1] for c in contribs], dtype=np.int32)
+                rows = np.stack([c[2] for c in contribs])
+                # pad the contribution count to a power of two so jit
+                # shapes stay bounded; pads are inert (rowmap −1 ⇒ all-zero
+                # one-hot ⇒ zero contribution) and keep dst sorted
+                C, Cp = len(contribs), _pad_pow2(len(contribs))
+                if Cp != C:
+                    src = np.concatenate([src, np.zeros(Cp - C, np.int32)])
+                    dst = np.concatenate(
+                        [dst, np.full(Cp - C, dst[-1], np.int32)])
+                    rows = np.concatenate(
+                        [rows, np.full((Cp - C, rows.shape[1]), -1,
+                                       np.int32)])
+                P_src = schedule.buckets[sli][sbj].P
+                u = jnp.take(dev[(sli, sbj)][:, P_src:, P_src:],
+                             jnp.asarray(src), axis=0)
+                w = ops.extend_add_batch(w, u, dst, rows)
+            dev[(li, bj)] = ops.frontal_factor_batch_ws(w, bucket.P, bs=bs)
+            t_disp += pc() - t0
+    # drain: the only host↔device sync — by now the host has assembled and
+    # dispatched every level, so this wait is whatever device work is left
+    for li in range(schedule.nlevels):
+        for bj, bucket in enumerate(schedule.buckets[li]):
+            t0 = pc()
+            Wf = np.asarray(dev[(li, bj)])
+            t_sync += pc() - t0
+            t0 = pc()
+            P = bucket.P
+            for bi, k in enumerate(bucket.members):
+                fp = schedule.fronts[k]
+                L11 = np.tril(Wf[bi, : fp.npiv, : fp.npiv])
+                L21 = Wf[bi, P : P + fp.nrest, : fp.npiv]
+                fronts[k] = _Front((fp.c0, fp.c1), fp.rows, L11, L21)
+            t_asm += pc() - t0
+    return fronts, _overlap_timings(t_asm, t_disp, t_sync)  # type: ignore[return-value]
 
 
 # ---------------------------------------------------------------------------
@@ -359,7 +542,9 @@ def multifrontal_solve(f: MultifrontalFactor, b: np.ndarray,
 def factor_and_solve_timed(a: CSRMatrix, b: np.ndarray | None = None,
                            relax: int = 8,
                            sym: Optional[SymbolicFactor] = None,
-                           backend: Backend = "numpy") -> dict:
+                           backend: Backend = "numpy",
+                           pad: str = "pow2",
+                           bs: Optional[int] = None) -> dict:
     """Measured factor+solve wall time — the per-(matrix, ordering) label
     signal, mirroring the paper's MUMPS timings.
 
@@ -367,7 +552,9 @@ def factor_and_solve_timed(a: CSRMatrix, b: np.ndarray | None = None,
     :class:`repro.core.plan.ExecutionPlan`) skips the symbolic stage
     entirely; ``t_symbolic`` is then reported as 0. ``relax`` tunes the
     supernode amalgamation and ``backend`` picks the front-math substrate,
-    so labeling can time the Pallas / batched paths too.
+    so labeling can time the Pallas / batched / pipelined paths too;
+    ``pad``/``bs`` are the autotuned bucket/block policy knobs (see
+    :mod:`repro.autotune.solve_tuner`).
     """
     if b is None:
         rng = np.random.default_rng(0)
@@ -379,7 +566,8 @@ def factor_and_solve_timed(a: CSRMatrix, b: np.ndarray | None = None,
     else:
         t_sym = 0.0
     t0 = time.perf_counter()
-    f = multifrontal_cholesky(a, sym, relax=relax, backend=backend)
+    f = multifrontal_cholesky(a, sym, relax=relax, backend=backend, pad=pad,
+                              bs=bs)
     t_fac = time.perf_counter() - t0
     t0 = time.perf_counter()
     x = multifrontal_solve(f, b)

@@ -11,13 +11,23 @@ factored in one batched device call. That turns the numeric phase from
 kernel launches (:func:`repro.kernels.ops.frontal_factor_batch_ws`).
 
 Fronts within a level are **size-bucketed**: each front's pivot count and
-update-row count are padded up to the next power of two (min ``MIN_PAD``)
-and fronts sharing a padded shape form one batch. Pivot padding columns
-are decoupled identity columns (they factor to 1 and contribute nothing);
-update-row padding is zero rows. Bucketing bounds both the wasted FLOPs
-(< 4× in the worst case, far less in practice — see ``occupancy`` in
-:meth:`LevelSchedule.stats`) and the number of distinct compiled kernel
-shapes.
+update-row count are padded up (min ``MIN_PAD``) and fronts sharing a
+padded shape form one batch. Pivot padding columns are decoupled identity
+columns (they factor to 1 and contribute nothing); update-row padding is
+zero rows. Bucketing bounds both the wasted FLOPs and the number of
+distinct compiled kernel shapes — the trade-off between the two is the
+**pad policy**:
+
+* ``"pow2"`` (default) — next power of two: few compiled shapes, up to 4×
+  padded FLOPs in the worst case.
+* ``"mult8"`` — next multiple of 8: tighter occupancy (≤ ~2× waste on tiny
+  fronts, far less on big ones) at the cost of more distinct shapes.
+
+The right choice is device-dependent (compile cost vs wasted FLOPs), which
+is why :mod:`repro.autotune.solve_tuner` measures it instead of hardcoding;
+``occupancy`` / ``per_level_occupancy`` in :meth:`LevelSchedule.stats`
+report the realized waste, per level so a bad pad choice on one wide level
+is not averaged away.
 """
 from __future__ import annotations
 
@@ -29,15 +39,24 @@ import numpy as np
 from .symbolic import SymbolicFactor, supernodes
 
 __all__ = ["FrontPlan", "Bucket", "LevelSchedule", "build_schedule",
-           "front_flops"]
+           "front_flops", "PAD_POLICIES"]
 
 MIN_PAD = 8
 
+#: recognized bucket pad policies (the autotuned knob)
+PAD_POLICIES = ("pow2", "mult8")
 
-def _pad_dim(x: int) -> int:
-    """Next power of two ≥ x (0 stays 0; floor at MIN_PAD)."""
+
+def _pad_dim(x: int, pad: str = "pow2") -> int:
+    """Padded bucket dim ≥ x (0 stays 0; floor at MIN_PAD): next power of
+    two under ``"pow2"``, next multiple of 8 under ``"mult8"``."""
     if x <= 0:
         return 0
+    if pad == "mult8":
+        return max(MIN_PAD, (int(x) + 7) // 8 * 8)
+    if pad != "pow2":
+        raise ValueError(f"unknown pad policy {pad!r} (want one of "
+                         f"{PAD_POLICIES})")
     return max(MIN_PAD, 1 << (int(x) - 1).bit_length())
 
 
@@ -95,6 +114,7 @@ class LevelSchedule:
     fronts: List[FrontPlan]
     levels: List[np.ndarray]          # supernode ids per level, ascending
     buckets: List[List[Bucket]]       # per level, the size buckets
+    pad: str = "pow2"                 # pad policy the buckets were built with
 
     @property
     def nlevels(self) -> int:
@@ -102,6 +122,14 @@ class LevelSchedule:
 
     def stats(self) -> dict:
         widths = [len(lv) for lv in self.levels]
+        # occupancy per level: true front cells / padded workspace cells of
+        # that level's buckets — the global ratio hides a badly padded wide
+        # level behind many well-packed small ones
+        per_level: List[float] = []
+        for li, lvl_buckets in enumerate(self.buckets):
+            t = sum(self.fronts[int(k)].m ** 2 for k in self.levels[li])
+            p = sum(b.M * b.M * len(b.members) for b in lvl_buckets)
+            per_level.append(t / p if p else 1.0)
         true_cells = sum(fp.m * fp.m for fp in self.fronts)
         pad_cells = sum(b.M * b.M * len(b.members)
                         for lvl in self.buckets for b in lvl)
@@ -113,6 +141,9 @@ class LevelSchedule:
             mean_level_width=float(np.mean(widths)) if widths else 0.0,
             nbatches=nbatches,
             occupancy=true_cells / pad_cells if pad_cells else 1.0,
+            per_level_occupancy=per_level,
+            min_level_occupancy=min(per_level, default=1.0),
+            pad=self.pad,
             front_flops=int(sum(fp.flops for fp in self.fronts)),
         )
 
@@ -130,12 +161,12 @@ def front_rows(sym: SymbolicFactor, c0: int, c1: int) -> np.ndarray:
 def build_schedule(sym: SymbolicFactor,
                    snode_ptr: np.ndarray | None = None,
                    snode_of: np.ndarray | None = None,
-                   relax: int = 8) -> LevelSchedule:
+                   relax: int = 8, pad: str = "pow2") -> LevelSchedule:
     """Front structures + parent links + levels + size buckets.
 
     ``snode_ptr``/``snode_of`` may be passed to reuse an existing supernode
     partition; otherwise :func:`repro.sparse.symbolic.supernodes` is called
-    with ``relax``.
+    with ``relax``. ``pad`` picks the bucket pad policy (see module doc).
     """
     if snode_ptr is None or snode_of is None:
         snode_ptr, snode_of = supernodes(sym, relax=relax)
@@ -165,8 +196,8 @@ def build_schedule(sym: SymbolicFactor,
         by_shape: Dict[Tuple[int, int], List[int]] = {}
         for k in lv:
             fp = fronts[int(k)]
-            key = (_pad_dim(fp.npiv), _pad_dim(fp.nrest))
+            key = (_pad_dim(fp.npiv, pad), _pad_dim(fp.nrest, pad))
             by_shape.setdefault(key, []).append(int(k))
         buckets.append([Bucket(P, R, members)
                         for (P, R), members in sorted(by_shape.items())])
-    return LevelSchedule(nsup, fronts, levels, buckets)
+    return LevelSchedule(nsup, fronts, levels, buckets, pad=pad)

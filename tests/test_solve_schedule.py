@@ -184,7 +184,8 @@ def test_factor_and_solve_timed_forwards_relax_and_backend(monkeypatch):
 
     monkeypatch.setattr(mf, "multifrontal_cholesky", spy)
     rb = factor_and_solve_timed(m, relax=3, backend="batched")
-    assert seen == {"relax": 3, "backend": "batched"}
+    assert seen == {"relax": 3, "backend": "batched", "pad": "pow2",
+                    "bs": None}
     assert rb["backend"] == "batched"
     assert rb["residual"] < 1e-5
 
