@@ -1,0 +1,164 @@
+#!/usr/bin/env python
+"""End-to-end bundle-lifecycle smoke: campaign → shadow → promote → rollback.
+
+The CI lifecycle leg's executable proof of the control plane's contract:
+
+1. A tiny labeling **campaign** produces per-matrix artifacts and a
+   trainable dataset (resume correctness is exercised by the CLI's
+   ``--max-cells`` + ``--gate-resume`` pair, outside this script).
+2. An **incumbent** trained on a subset serves through the dispatcher; a
+   **candidate** trained on the full suite shadow-serves next to it. The
+   client-visible plans must be byte-identical with and without the
+   shadow riding, and no extra plan builds may happen.
+3. A strict gate (impossible win-rate threshold) must **reject**; the
+   permissive gate must **promote** — after which the old plans are
+   invisible (fresh build under the new fingerprint) — and **rollback**
+   must restore the incumbent with its disk-cached plans intact (no new
+   symbolic analysis).
+
+Exits nonzero on any violated assertion. Writes ``BENCH_lifecycle.json``.
+
+    PYTHONPATH=src python -m benchmarks.lifecycle_e2e --count 8 --scale 0.25
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+from repro.core.labeling import LabeledDataset
+from repro.engine import EngineConfig, SolverEngine
+from repro.lifecycle import (CampaignConfig, GateRejected, PromotionGate,
+                             assemble_dataset, run_campaign)
+from repro.sparse.dataset import generate_suite
+
+
+def _subset(ds: LabeledDataset, k: int) -> LabeledDataset:
+    return LabeledDataset(ds.features[:k], ds.labels[:k], ds.times[:k],
+                          ds.order_times[:k], ds.fills[:k], ds.flops[:k],
+                          ds.names[:k], ds.groups[:k], ds.dims[:k],
+                          ds.nnzs[:k], ds.algorithms, ds.feature_set)
+
+
+def _engine(workdir: str, seed: int) -> SolverEngine:
+    return SolverEngine(EngineConfig(
+        model="decision_tree", path="host", fast_grids=True, cv=2,
+        test_size=0.34, seed=seed,
+        cache_dir=os.path.join(workdir, "plan_cache"),
+        bundle_dir=os.path.join(workdir, "bundles"),
+        promote_min_accuracy=0.0, promote_min_shadow_requests=1,
+        promote_min_win_rate=0.0))
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    p.add_argument("--count", type=int, default=8)
+    p.add_argument("--seed", type=int, default=7)
+    p.add_argument("--scale", type=float, default=0.25)
+    p.add_argument("--workdir", default=None,
+                   help="working directory (default: a fresh tempdir)")
+    p.add_argument("--out", default="BENCH_lifecycle.json")
+    args = p.parse_args()
+    workdir = args.workdir or tempfile.mkdtemp(prefix="lifecycle_e2e_")
+    os.makedirs(workdir, exist_ok=True)
+    report: dict = dict(count=args.count, seed=args.seed, scale=args.scale)
+    t_start = time.perf_counter()
+
+    # 1. campaign → dataset ------------------------------------------------
+    mats = list(generate_suite(count=args.count, seed=args.seed,
+                               size_scale=args.scale))
+    ccfg = CampaignConfig(campaign_id="lifecycle_e2e",
+                          labels_dir=os.path.join(workdir, "labels"))
+    res = run_campaign(mats, ccfg, verbose=True)
+    assert res.report["complete"], "campaign did not complete"
+    ds = res.dataset or assemble_dataset(mats, ccfg)
+    report["campaign"] = res.report
+
+    # 2. incumbent serves, candidate shadows -------------------------------
+    engine = _engine(workdir, seed=args.seed)
+    engine.train(_subset(ds, max(4, len(mats) // 2)))  # the mini-suite fit
+    fp_incumbent = engine.fingerprint
+    cand = _engine(workdir, seed=args.seed + 1)
+    cand.train(ds)                                     # the larger suite
+    cand_path = os.path.join(workdir, "candidate.bundle")
+    cand.save(cand_path)
+
+    server = engine.serve(batch_size=4, max_wait_ms=2.0)
+    try:
+        baseline = [f.result(60) for f in
+                    [server.submit(a) for a in mats]]
+        built0 = engine.builder.plans_built
+        engine.start_shadow(cand_path)
+        shadowed = [f.result(60) for f in
+                    [server.submit(a) for a in mats]]
+        assert ([pl.algorithm for pl in baseline]
+                == [pl.algorithm for pl in shadowed]), \
+            "client-visible plans changed while the shadow rode along"
+        assert engine.builder.plans_built == built0, \
+            "shadow evaluation triggered plan builds on the serving path"
+        assert engine.shadow.drain(60), "shadow queue did not drain"
+        stats = engine.shadow.stats()
+        assert stats["evaluated"] >= len(mats), \
+            f"shadow evaluated {stats['evaluated']} < {len(mats)}"
+        report["shadow"] = stats
+        print(f"[lifecycle] shadow: {stats['evaluated']} evaluated, "
+              f"agreement {stats['agreement_rate']:.2f}, "
+              f"win rate {stats['win_rate']:.2f}")
+
+        # 3a. the strict gate must hold the line ---------------------------
+        try:
+            engine.promote(gate=PromotionGate(
+                min_test_accuracy=0.0, min_shadow_requests=1,
+                min_shadow_win_rate=1.01))   # > 1: unreachable by design
+            raise AssertionError("impossible win-rate gate let the "
+                                 "candidate through")
+        except GateRejected as exc:
+            failed = [c["check"] for c in exc.decision["checks"]
+                      if not c["passed"]]
+            assert "shadow.win_rate" in failed
+            report["gate_rejection"] = exc.decision
+            print(f"[lifecycle] strict gate rejected (checks: {failed})")
+        assert engine.fingerprint == fp_incumbent, \
+            "a rejected promotion must change nothing"
+
+        # 3b. permissive gate promotes; old plans become invisible ---------
+        decision = engine.promote()
+        report["promotion"] = {k: decision[k] for k in
+                               ("version", "previous_version", "passed")}
+        assert engine.fingerprint != fp_incumbent
+        sb = engine.builder.sym_builds          # new builder: counters at 0
+        engine.plan(mats[0])
+        assert engine.builder.sym_builds == sb + 1, \
+            "promote did not invalidate the plan cache (stale plan served)"
+        print(f"[lifecycle] promoted {decision['version']} "
+              f"(was {decision['previous_version']})")
+
+        # 3c. rollback restores the incumbent and its cached plans ---------
+        entry = engine.rollback()
+        assert engine.fingerprint == fp_incumbent, \
+            "rollback did not restore the incumbent fingerprint"
+        sb = engine.builder.sym_builds
+        engine.plan(mats[0])
+        assert engine.builder.sym_builds == sb, \
+            "rollback lost the incumbent's plans (symbolic analysis re-ran)"
+        report["rollback"] = dict(version=entry["version"],
+                                  status=entry["status"])
+        print(f"[lifecycle] rolled back to {entry['version']}; "
+              f"incumbent plans served from disk")
+    finally:
+        engine.stop_shadow()
+        server.close()
+
+    report["wall_s"] = time.perf_counter() - t_start
+    report["ok"] = True
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(report, f, indent=2, default=str)
+    print(f"[lifecycle] OK ({report['wall_s']:.1f} s) → {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,20 +1,27 @@
 #!/usr/bin/env python
-"""engine status: render a bundle's report card and/or a live server's stats.
+"""engine status: render a bundle's report card, a registry's lineage,
+and/or a live server's stats.
 
     PYTHONPATH=src python scripts/engine_status.py --bundle selector.bundle
     PYTHONPATH=src python scripts/engine_status.py --host 127.0.0.1 --port 7077
-    PYTHONPATH=src python scripts/engine_status.py --bundle b.bundle --port 7077
+    PYTHONPATH=src python scripts/engine_status.py --registry artifacts/bundles
 
-Two independent views, composable in one invocation:
+Three independent views, composable in one invocation:
 
 * ``--bundle PATH`` — load a :class:`SelectorBundle` (validating it) and
   render its schema-v2 report card: fingerprint, model/scaler/feature-set
   names, held-out accuracy, per-algorithm recall, the confusion matrix,
   and the dataset provenance.
+* ``--registry DIR`` — render a :class:`repro.lifecycle.registry
+  .BundleRegistry`: every registered version with its status, accuracy,
+  and the lineage chain of the serving bundle (which retrains produced
+  production).
 * ``--host/--port`` — connect a :class:`PlanRPCClient` to a running plan
   server and print its live ``stats()`` (requests, hit rates, shed /
   rejected counts, queue depth, latency percentiles) plus the structured
-  metrics snapshot (``--metrics`` for every instrument).
+  metrics snapshot (``--metrics`` for every instrument), including the
+  shadow-evaluation scorecard and the serving mesh's per-shard
+  utilization when those subsystems are active.
 
 Stdlib + repro only; exits nonzero if a requested view cannot be produced.
 """
@@ -77,6 +84,75 @@ def render_bundle(path: str) -> int:
     return 0
 
 
+def render_registry(root: str) -> int:
+    from repro.lifecycle.registry import BundleRegistry, BundleRegistryError
+
+    try:
+        reg = BundleRegistry(root)
+        entries = reg.entries()
+        serving = reg.serving_version()
+        previous = reg.previous_version()
+    except (OSError, BundleRegistryError) as exc:
+        print(f"[engine-status] cannot read registry {root!r}: {exc}")
+        return 1
+    if not entries:
+        print(f"registry    {root}  (empty)")
+        return 0
+    print(f"registry    {root}  ({len(entries)} bundles)")
+    for e in entries:
+        mark = ("▶" if e["version"] == serving
+                else "↩" if e["version"] == previous else " ")
+        acc = e.get("test_accuracy")
+        print(f"  {mark} {e['version']}  {e['status']:<11} "
+              f"model={e.get('model')}  acc={_fmt_pct(acc).strip()}"
+              + (f"  source={e['source']}" if e.get("source") else ""))
+    chain = reg.lineage()
+    if chain:
+        arrows = " → ".join(e["version"] for e in reversed(chain))
+        print(f"lineage     {arrows}  (oldest → serving)")
+    if previous:
+        print(f"rollback    would restore {previous}")
+    return 0
+
+
+def _render_shadow_panel(m: dict) -> None:
+    """The shadow.* scorecard, when a candidate is (or was) riding."""
+    if not m.get("shadow.requests"):
+        return
+    n = m.get("shadow.evaluated", 0)
+    print(f"shadow      {int(m['shadow.requests'])} mirrored, "
+          f"{int(n)} evaluated "
+          f"({int(m.get('shadow.agreements', 0))} agree / "
+          f"{int(m.get('shadow.disagreements', 0))} disagree), "
+          f"{int(m.get('shadow.dropped', 0))} dropped")
+    if n:
+        print(f"  agreement rate {_fmt_pct(m.get('shadow.agreement_rate'))}"
+              f"   win rate {_fmt_pct(m.get('shadow.win_rate'))}"
+              f"   (counterfactual predicted flops)")
+
+
+def _render_mesh_panel(m: dict) -> None:
+    """Per-shard serving-mesh utilization from the mesh.* instruments."""
+    nd = int(m.get("mesh.shards", 0) or 0)
+    if nd <= 0:
+        return
+    rows = []
+    for i in range(nd):
+        req = m.get(f"mesh.shard{i}.requests")
+        pad = m.get(f"mesh.shard{i}.pad_rows")
+        if req is None:
+            break
+        rows.append((i, int(req), int(pad or 0)))
+    if not rows:
+        return
+    print(f"mesh        {nd} shard(s), per-shard rows (real/pad):")
+    for i, req, pad in rows:
+        total = req + pad
+        waste = (pad / total) if total else 0.0
+        print(f"  shard {i:<3} {req:>8} real  {pad:>8} pad  "
+              f"({waste * 100:4.1f}% waste)")
+
+
 def render_server(host: str, port: int, show_all_metrics: bool) -> int:
     from repro.launch.rpc import PlanRPCClient
 
@@ -129,6 +205,8 @@ def render_server(host: str, port: int, show_all_metrics: bool) -> int:
         if ov is not None:
             print(f"  overlap efficiency {ov:.2f} "
                   f"(host-busy fraction of assembly + device wait)")
+    _render_shadow_panel(m)
+    _render_mesh_panel(m)
     print(f"queue       depth {s.get('queue_depth', 0)}"
           + (f" / max_queue {s.get('max_queue')}"
              if s.get("max_queue") else " (unbounded)")
@@ -163,19 +241,29 @@ def main() -> int:
                     "plan server's stats + metrics.")
     p.add_argument("--bundle", default=None,
                    help="path to a SelectorBundle to render")
+    p.add_argument("--registry", default=None, metavar="DIR",
+                   help="bundle registry directory to render "
+                        "(versions, statuses, serving lineage)")
     p.add_argument("--host", default="127.0.0.1")
     p.add_argument("--port", type=int, default=None,
                    help="RPC port of a running plan server")
     p.add_argument("--metrics", action="store_true",
                    help="print the full metrics snapshot")
     args = p.parse_args()
-    if args.bundle is None and args.port is None:
-        p.error("nothing to do: pass --bundle and/or --port")
+    if args.bundle is None and args.port is None and args.registry is None:
+        p.error("nothing to do: pass --bundle, --registry, and/or --port")
     rc = 0
+    shown = False
     if args.bundle:
         rc |= render_bundle(args.bundle)
+        shown = True
+    if args.registry:
+        if shown:
+            print()
+        rc |= render_registry(args.registry)
+        shown = True
     if args.port is not None:
-        if args.bundle:
+        if shown:
             print()
         rc |= render_server(args.host, args.port, args.metrics)
     return rc

@@ -106,9 +106,16 @@ class PlanDispatcher:
                  latency_window: int = 100_000,
                  max_queue: Optional[int] = None,
                  default_deadline_ms: Optional[float] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 shadow=None):
         assert builder.selector is not None, "cold path needs a selector"
         self.builder = builder
+        # shadow mirror (repro.lifecycle.shadow.ShadowEvaluator, or a
+        # zero-arg provider returning one/None so the engine can start and
+        # stop shadowing while this dispatcher is live): every resolved
+        # decision — warm hit or fresh selection — is mirrored to the
+        # candidate off the hot path; never consulted for the response
+        self._shadow = shadow
         self.cache = builder.cache
         self.batch_size = batch_size
         self.max_wait = max_wait_ms / 1e3
@@ -156,6 +163,20 @@ class PlanDispatcher:
         for t in self._builders:
             t.start()
 
+    def set_shadow(self, shadow) -> None:
+        """Install (or clear, with None) the shadow mirror at runtime."""
+        self._shadow = shadow
+
+    def _mirror(self, mat: CSRMatrix, algorithm: str, key: str) -> None:
+        """Hand one resolved decision to the shadow evaluator, if any.
+        ``observe`` is O(enqueue) and never raises — the mirror can only
+        drop observations, never slow or fail the serving path."""
+        shadow = self._shadow
+        if callable(shadow) and not hasattr(shadow, "observe"):
+            shadow = shadow()
+        if shadow is not None:
+            shadow.observe(mat, algorithm, key=key)
+
     # -- client surface ------------------------------------------------------
     def submit(self, mat: CSRMatrix,
                ctx: Optional[RequestContext] = None
@@ -181,6 +202,7 @@ class PlanDispatcher:
             self._c_warm.inc()
             self._finish(ctx)
             fut.set_result(plan)
+            self._mirror(mat, plan.algorithm, key)
             return fut
         if ctx.expired():
             self._shed(_PlanRequest(mat, key, ctx, fut))
@@ -404,6 +426,11 @@ class PlanDispatcher:
             for r in reqs:
                 r.ctx.add_span("select", dt)
         for key, name in zip(todo, names):
+            with self._inflight_lock:
+                reqs = self._inflight.get(key)
+                rep = reqs[0].mat if reqs else None
+            if rep is not None:
+                self._mirror(rep, name, key)
             self._build_queue.put((key, name))
 
     # -- stage 2: plan build (reorder + symbolic) ----------------------------

@@ -179,6 +179,16 @@ class PlanBuilder:
                 self.metrics.counter("infer.batches").inc()
                 self.metrics.counter("infer.matrices").inc(len(chunk))
                 self.metrics.histogram("infer.batch_s").observe(dt)
+                if self.path == "device":
+                    # per-shard utilization of the serving mesh: how many
+                    # rows of this jit bucket were live requests vs
+                    # pad-filler on each shard
+                    from repro.distributed.meshctx import (
+                        get_serving_mesh, record_shard_utilization)
+
+                    record_shard_utilization(self.metrics,
+                                             get_serving_mesh(),
+                                             len(chunk), len(batch))
             for i, name in zip(chunk, got):
                 names[i] = name
         return names  # type: ignore[return-value]
@@ -277,8 +287,11 @@ def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
                 and solve_dtype == "fp64"):
             eff_dtype = "fp32_refine"  # these backends factor in f32
         dtype = np.float64 if eff_dtype == "fp64" else np.float32
+        # ctx rides into the numeric phase: the level-scheduled backends
+        # re-check the deadline at level boundaries and abandon the
+        # factorization mid-flight with DeadlineExceeded
         f = multifrontal_cholesky(pa, sym=plan.sym, backend=backend,
-                                  dtype=dtype, pad=pad, bs=bs)
+                                  dtype=dtype, pad=pad, bs=bs, ctx=ctx)
         fstats = f.stats
         t_fac = time.perf_counter() - t0
         t0 = time.perf_counter()

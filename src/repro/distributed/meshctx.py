@@ -27,7 +27,8 @@ import numpy as np
 
 __all__ = ["MeshContext", "set_mesh_context", "get_mesh_context",
            "mesh_context", "ServingMesh", "make_serving_mesh",
-           "set_serving_mesh", "get_serving_mesh", "serving_mesh"]
+           "set_serving_mesh", "get_serving_mesh", "serving_mesh",
+           "record_shard_utilization"]
 
 
 @dataclasses.dataclass
@@ -109,6 +110,23 @@ class ServingMesh:
 
         return P(self.axis)
 
+    def shard_utilization(self, b_real: int, b_padded: int
+                          ) -> "list[Tuple[int, int]]":
+        """Per-shard (real_rows, pad_rows) for a batch of ``b_real`` live
+        requests padded to ``b_padded`` rows. The shard_map splits the
+        padded batch contiguously, so padding concentrates on the tail
+        shards — exactly the imbalance these numbers make visible."""
+        nd = self.num_devices
+        if b_padded % nd:
+            raise ValueError(
+                f"padded batch {b_padded} does not divide over {nd} shards")
+        per = b_padded // nd
+        out = []
+        for i in range(nd):
+            real = min(per, max(0, b_real - i * per))
+            out.append((real, per - real))
+        return out
+
 
 def make_serving_mesh(num_devices: Optional[int] = None) -> ServingMesh:
     """Serving mesh over the first ``num_devices`` devices (default: all).
@@ -153,6 +171,24 @@ def get_serving_mesh() -> ServingMesh:
     if _DEFAULT is None:
         _DEFAULT = make_serving_mesh(1)
     return _DEFAULT
+
+
+def record_shard_utilization(metrics, sm: ServingMesh, b_real: int,
+                             b_batch: int) -> None:
+    """Report one device micro-batch's per-shard utilization into a
+    :class:`repro.core.metrics.MetricsRegistry`: ``mesh.shards`` (gauge,
+    the active width) plus per-shard ``mesh.shard<i>.requests`` /
+    ``mesh.shard<i>.pad_rows`` counters (real rows served vs padding
+    waste). ``b_batch`` is the jit bucket the batch was padded to (rounded
+    up to a shard multiple, mirroring the sharded wrappers)."""
+    if metrics is None:
+        return
+    nd = sm.num_devices
+    b_padded = -(-max(b_batch, b_real) // nd) * nd
+    metrics.gauge("mesh.shards").set(nd)
+    for i, (real, pad) in enumerate(sm.shard_utilization(b_real, b_padded)):
+        metrics.counter(f"mesh.shard{i}.requests").inc(real)
+        metrics.counter(f"mesh.shard{i}.pad_rows").inc(pad)
 
 
 class serving_mesh:

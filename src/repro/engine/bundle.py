@@ -182,6 +182,22 @@ class SelectorBundle:
                     f"algorithms {list(self.algorithms)}")
         return self
 
+    def describe(self) -> Dict[str, Any]:
+        """Compact plain-data summary (what the bundle registry indexes):
+        identity + capability names + the headline quality numbers, never
+        the fitted state."""
+        return dict(
+            fingerprint=self.fingerprint,
+            schema_version=self.schema_version,
+            model=self.model_name,
+            scaler=self.scaler_name,
+            feature_set=self.feature_set,
+            algorithms=list(self.algorithms),
+            created_unix=self.created_unix,
+            test_accuracy=(self.report_card or {}).get("test_accuracy"),
+            n_samples=(self.provenance or {}).get("n_samples"),
+        )
+
     # -- persistence ---------------------------------------------------------
     def save(self, path: str) -> str:
         payload = dataclasses.asdict(self)

@@ -91,6 +91,16 @@ class EngineConfig:
     test_size: float = 0.2
     seed: int = 0
 
+    # bundle lifecycle (repro.lifecycle): where the versioned bundle
+    # registry lives, the promotion-gate thresholds promote() applies by
+    # default, and the shadow evaluator's mirror-queue bound (a full queue
+    # drops observations rather than slowing the serving path)
+    bundle_dir: str = os.path.join("artifacts", "bundles")
+    promote_min_accuracy: float = 0.5
+    promote_min_shadow_requests: int = 10
+    promote_min_win_rate: float = 0.5
+    shadow_max_queue: int = 512
+
     def __post_init__(self) -> None:
         if self.path not in ("host", "device"):
             raise ValueError(f"path must be 'host' or 'device', "

@@ -11,6 +11,7 @@ be served by a newer model.
 """
 from __future__ import annotations
 
+import threading
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -67,6 +68,14 @@ class SolverEngine:
         # dataset provenance of the last train() — persisted into bundle
         # schema v2 by save() (None for attach()/load()-built engines)
         self.last_provenance: Optional[Dict[str, Any]] = None
+        # bundle lifecycle: the bundle the live selector came from (so a
+        # re-registration at the next promote reuses its report card
+        # instead of a stale last_report), the shadow evaluator mirroring
+        # the serving path, and the registry handle
+        self._attached_bundle: Optional[SelectorBundle] = None
+        self._shadow = None
+        self._registry = None
+        self._promote_lock = threading.Lock()
         if selector is not None:
             self.attach(selector)
 
@@ -91,6 +100,7 @@ class SolverEngine:
                 f"selector was trained on feature set {fs!r} but the engine "
                 f"is configured for {self.config.feature_set!r}")
         self._selector = selector
+        self._attached_bundle = None  # promote()/load() re-set it after
         self.refresh_fingerprint()
         return self
 
@@ -116,6 +126,7 @@ class SolverEngine:
         self._selector, report = train_selector(dataset, **kwargs)
         self.last_report = report
         self.last_provenance = _dataset_provenance(dataset)
+        self._attached_bundle = None  # the fit is newer than any bundle
         self.refresh_fingerprint()
         return report
 
@@ -211,6 +222,11 @@ class SolverEngine:
             ctx = RequestContext.mint(
                 deadline_ms=self.config.default_deadline_ms)
         plan, _ = self._get_builder().get_or_build(a, ctx=ctx)
+        if self._shadow is not None:
+            # mirror the decision to the shadow candidate — off the hot
+            # path (O(enqueue), never raises), after the real plan is in
+            # hand, so the client-visible response is untouched
+            self._shadow.observe(a, plan.algorithm, key=plan.fingerprint)
         return plan
 
     def plan_batch(self, mats: Sequence) -> List:
@@ -313,7 +329,11 @@ class SolverEngine:
                       build_workers=cfg.build_workers,
                       max_queue=cfg.max_queue,
                       default_deadline_ms=cfg.default_deadline_ms,
-                      metrics=self.metrics)
+                      metrics=self.metrics,
+                      # late start_shadow()/stop_shadow() are picked up
+                      # live: the dispatcher re-reads the provider on
+                      # every mirrored decision
+                      shadow=lambda: self._shadow)
         kwargs.update(overrides)
         server = AsyncPlanServer(self._get_builder(), **kwargs)
         if not rpc:
@@ -332,7 +352,178 @@ class SolverEngine:
             server.close()
             raise
 
+    # -- bundle lifecycle: shadow → promote → rollback -----------------------
+    @property
+    def registry(self):
+        """The :class:`repro.lifecycle.registry.BundleRegistry` rooted at
+        ``config.bundle_dir`` — the durable side of promote/rollback."""
+        if (self._registry is None
+                or self._registry.root != self.config.bundle_dir):
+            from repro.lifecycle.registry import BundleRegistry
+
+            self._registry = BundleRegistry(self.config.bundle_dir)
+        return self._registry
+
+    @property
+    def shadow(self):
+        """The active :class:`repro.lifecycle.shadow.ShadowEvaluator`, or
+        None. While set, every ``plan()``/``solve()`` decision (and every
+        decision of servers built by ``serve()``) is mirrored to it."""
+        return self._shadow
+
+    def start_shadow(self, candidate):
+        """Shadow-serve a candidate next to the incumbent.
+
+        ``candidate`` is a :class:`SelectorBundle`, a path to one, or a
+        fitted ``ReorderSelector``. Replaces any active shadow. The
+        evaluator reports into this engine's metrics (``shadow.*``) and
+        its ``stats()`` are the online evidence ``promote()`` gates on."""
+        from repro.lifecycle.shadow import ShadowEvaluator
+
+        self.stop_shadow()
+        self._shadow = ShadowEvaluator(
+            candidate, metrics=self.metrics,
+            max_queue=self.config.shadow_max_queue)
+        return self._shadow
+
+    def stop_shadow(self, timeout: float = 10.0
+                    ) -> Optional[Dict[str, Any]]:
+        """Detach and stop the shadow evaluator; its final ``stats()``
+        (after draining the mirror queue), or None if none was active."""
+        shadow, self._shadow = self._shadow, None
+        if shadow is None:
+            return None
+        shadow.drain(timeout)
+        shadow.close(timeout)
+        return shadow.stats()
+
+    def promote(self, candidate=None, *, gate=None,
+                source: Optional[str] = None) -> Dict[str, Any]:
+        """Gated atomic swap of the serving bundle.
+
+        ``candidate`` defaults to the bundle the active shadow evaluator
+        is scoring. The gate (``PromotionGate.from_config(self.config)``
+        unless one is passed) checks the candidate's report card and — if
+        the shadow evaluator is scoring this exact candidate — its online
+        win rate; :class:`repro.lifecycle.promote.NotPromotable` /
+        :class:`GateRejected` abort with nothing changed. On pass: the
+        incumbent and the candidate are registered (lineage edge incumbent
+        → candidate), the registry's serving pointer moves, the engine
+        adopts the candidate, and — via the fingerprint → cache-version
+        plumbing — every plan built under the incumbent becomes invisible
+        (restored intact by :meth:`rollback`). Returns the gate decision
+        extended with ``version``/``previous_version``."""
+        from repro.lifecycle.promote import PromotionGate, evaluate_gate
+
+        with self._promote_lock:
+            shadow = self._shadow
+            if candidate is None:
+                if shadow is None or shadow.bundle is None:
+                    raise EngineError(
+                        "promote() has no candidate: pass a SelectorBundle "
+                        "(or path), or start_shadow() with a bundle first")
+                candidate = shadow.bundle
+            elif isinstance(candidate, str):
+                candidate = SelectorBundle.load(candidate)
+            candidate.validate()
+            if gate is None:
+                gate = PromotionGate.from_config(self.config)
+            shadow_stats = None
+            if (shadow is not None and shadow.candidate_fingerprint
+                    == candidate.fingerprint):
+                shadow.drain(10.0)  # settle the scorecard before gating
+                shadow_stats = shadow.stats()
+            decision = evaluate_gate(candidate, gate, shadow_stats)
+
+            reg = self.registry
+            incumbent = self._current_bundle()
+            inc_entry = None
+            if incumbent is not None:
+                inc_entry = reg.register(incumbent, source="incumbent")
+                if reg.serving_version() is None:
+                    # first promotion ever: record that the incumbent
+                    # *was* serving, so rollback has a target
+                    reg.mark_serving(inc_entry["version"])
+            cand_entry = reg.register(
+                candidate, source=source or "promote",
+                parent=None if inc_entry is None else inc_entry["version"])
+            entry = reg.mark_serving(cand_entry["version"])
+            self._adopt_bundle(candidate)
+            self.stop_shadow()
+            self.metrics.emit("lifecycle.promote",
+                              version=entry["version"],
+                              fingerprint=candidate.fingerprint)
+            return dict(decision, version=entry["version"],
+                        previous_version=(None if inc_entry is None
+                                          else inc_entry["version"]))
+
+    def rollback(self) -> Dict[str, Any]:
+        """Swap the serving bundle back to the registry's ``previous``
+        version. The engine re-adopts that bundle, and the fingerprint →
+        cache-version plumbing makes its previously persisted plans
+        visible again (nothing was deleted at promote time). Returns the
+        restored registry entry."""
+        with self._promote_lock:
+            entry = self.registry.rollback()
+            self._adopt_bundle(self.registry.load(entry["version"]))
+            self.metrics.emit("lifecycle.rollback",
+                              version=entry["version"],
+                              fingerprint=entry["fingerprint"])
+            return entry
+
+    def _adopt_bundle(self, bundle: SelectorBundle) -> None:
+        """Make ``bundle`` the serving state: sync the capability fields,
+        attach its selector (which re-versions the plan cache off the new
+        fingerprint), and remember the bundle for later registration."""
+        import dataclasses
+
+        if bundle.feature_set != self.config.feature_set:
+            raise EngineError(
+                f"bundle was trained on feature set "
+                f"{bundle.feature_set!r} but the engine is configured for "
+                f"{self.config.feature_set!r}")
+        self.config = dataclasses.replace(
+            self.config, model=bundle.model_name,
+            scaling=bundle.scaler_name, algorithms=list(bundle.algorithms))
+        self.attach(bundle.to_selector())
+        self._attached_bundle = bundle
+        # last_report described the *previous* fit; the adopted bundle's
+        # own report card travels with it
+        self.last_report = None
+        self.last_provenance = None
+
     # -- persistence ---------------------------------------------------------
+    def _report_card(self) -> Optional[Dict[str, Any]]:
+        """The schema-v2 report card of the last ``train()``, or None for
+        an attach()/load()-built engine (whose quality was not measured
+        here)."""
+        if self.last_report is None:
+            return None
+        rep = self.last_report
+        conf = rep.get("confusion")
+        return dict(
+            test_accuracy=rep.get("test_accuracy"),
+            cv_score=rep.get("cv_score"),
+            best_params=rep.get("best_params"),
+            per_algorithm_recall=rep.get("per_algorithm_recall"),
+            confusion=(np.asarray(conf).tolist()
+                       if conf is not None else None),
+            test_support=rep.get("test_support"),
+        )
+
+    def _current_bundle(self) -> Optional[SelectorBundle]:
+        """The serving state as a bundle: the attached bundle when the live
+        selector still matches it (so its report card survives), else a
+        fresh snapshot carrying this engine's training report (if any)."""
+        if self._selector is None:
+            return None
+        if (self._attached_bundle is not None
+                and self._attached_bundle.fingerprint == self._fingerprint):
+            return self._attached_bundle
+        return SelectorBundle.from_selector(
+            self.selector, report_card=self._report_card(),
+            provenance=self.last_provenance)
+
     def save(self, path: str, meta: Optional[Dict[str, Any]] = None) -> str:
         """Persist the fitted selector as a versioned SelectorBundle.
 
@@ -341,20 +532,9 @@ class SolverEngine:
         recall, confusion matrix) and the dataset provenance — an
         attach()/load()-built engine saves a bundle with both ``None``."""
         meta = dict(meta or {})
-        report_card = None
-        if self.last_report is not None:
-            rep = self.last_report
-            meta.setdefault("test_accuracy", rep.get("test_accuracy"))
-            conf = rep.get("confusion")
-            report_card = dict(
-                test_accuracy=rep.get("test_accuracy"),
-                cv_score=rep.get("cv_score"),
-                best_params=rep.get("best_params"),
-                per_algorithm_recall=rep.get("per_algorithm_recall"),
-                confusion=(np.asarray(conf).tolist()
-                           if conf is not None else None),
-                test_support=rep.get("test_support"),
-            )
+        report_card = self._report_card()
+        if report_card is not None:
+            meta.setdefault("test_accuracy", report_card["test_accuracy"])
         return SelectorBundle.from_selector(
             self.selector, meta=meta, report_card=report_card,
             provenance=self.last_provenance).save(path)
@@ -385,7 +565,8 @@ class SolverEngine:
                                      algorithms=list(bundle.algorithms))
         engine = cls(config)
         engine.attach(bundle.to_selector())
-        return engine
+        engine._attached_bundle = bundle  # keep its report card for
+        return engine                     # registration at promote time
 
     # -- introspection -------------------------------------------------------
     def feature_set(self):

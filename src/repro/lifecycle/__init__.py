@@ -1,0 +1,42 @@
+"""Bundle lifecycle control plane: campaign → shadow → promote → rollback.
+
+The ML-ops layer that turns the repo from "a model we trained once" into a
+continuously-trainable serving system:
+
+* :mod:`repro.lifecycle.campaign` — sharded, resumable labeling campaigns
+  over the (matrix × reordering algorithm) grid, with per-matrix JSON
+  artifacts and a ``BENCH_campaign.json`` report.
+* :mod:`repro.lifecycle.shadow` — a candidate bundle shadow-serves next to
+  the incumbent, scored by agreement and counterfactual predicted-flops
+  win rate, entirely off the hot path.
+* :mod:`repro.lifecycle.promote` — the configurable promotion gate
+  (report-card accuracy + shadow win rate) with typed rejections.
+* :mod:`repro.lifecycle.registry` — versioned bundles under
+  ``artifacts/bundles/`` with lineage metadata and the serving/previous
+  pointers that ``SolverEngine.promote()`` / ``rollback()`` swap.
+"""
+# PEP 562 lazy re-exports (the repro.engine idiom): importing the package
+# must not import every submodule — `python -m repro.lifecycle.campaign`
+# would otherwise warn about the module being in sys.modules pre-exec
+_LAZY = {
+    "BundleRegistry": "registry", "BundleRegistryError": "registry",
+    "DEFAULT_BUNDLE_DIR": "registry",
+    "PromotionGate": "promote", "PromotionError": "promote",
+    "NotPromotable": "promote", "GateRejected": "promote",
+    "evaluate_gate": "promote",
+    "ShadowEvaluator": "shadow",
+    "CampaignConfig": "campaign", "CampaignResult": "campaign",
+    "run_campaign": "campaign", "assemble_dataset": "campaign",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        mod = importlib.import_module(f"repro.lifecycle.{_LAZY[name]}")
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro.lifecycle' has no attribute "
+                         f"{name!r}")

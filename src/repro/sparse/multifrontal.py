@@ -62,6 +62,23 @@ Backend = Literal["numpy", "pallas", "batched", "pipelined"]
 DEVICE_BACKENDS = ("pallas", "batched", "pipelined")
 
 
+def _check_deadline(ctx, stage: str) -> None:
+    """Deadline checkpoint at a level boundary of the numeric phase: a
+    request whose :class:`repro.core.reqctx.RequestContext` deadline has
+    passed raises :class:`DeadlineExceeded` *mid-factorization* instead of
+    burning the remaining levels on an answer nobody is waiting for.
+    ``ctx`` is duck-typed (anything with ``expired()``/``remaining()``);
+    the import is lazy to keep this module free of a core dependency."""
+    if ctx is None or not ctx.expired():
+        return
+    from repro.core.reqctx import DeadlineExceeded
+
+    late_ms = -(ctx.remaining() or 0.0) * 1e3
+    raise DeadlineExceeded(
+        f"deadline exceeded {late_ms:.1f} ms ago at {stage} — "
+        f"factorization abandoned")
+
+
 @dataclasses.dataclass
 class _Front:
     cols: Tuple[int, int]    # [c0, c1) pivot columns
@@ -156,6 +173,7 @@ def multifrontal_cholesky(
     dtype: np.dtype | type = np.float64,
     pad: str = "pow2",
     bs: Optional[int] = None,
+    ctx=None,
 ) -> MultifrontalFactor:
     """Numeric supernodal factorization of an SPD CSR matrix.
 
@@ -167,6 +185,13 @@ def multifrontal_cholesky(
     panel block-size cap of the batched kernels (None → 32). The returned
     factor carries the :class:`LevelSchedule` used, so
     :func:`multifrontal_solve` can run level-batched sweeps.
+
+    ``ctx`` is an optional :class:`repro.core.reqctx.RequestContext`: the
+    level-scheduled backends re-check its deadline at every assembly-tree
+    level boundary and abandon the factorization with
+    :class:`~repro.core.reqctx.DeadlineExceeded` once it has passed —
+    serving-path deadline discipline extends into the numeric solve
+    instead of stopping at plan build.
     """
     assert a.data is not None, "numeric factorization needs values"
     if sym is None:
@@ -176,10 +201,11 @@ def multifrontal_cholesky(
     eff_dtype = np.dtype(np.float32 if backend in DEVICE_BACKENDS else dtype)
 
     timings: dict = {}
+    _check_deadline(ctx, "factorization start")
     if backend == "batched":
-        fronts, timings = _factor_batched(a, schedule, bs=bs)
+        fronts, timings = _factor_batched(a, schedule, bs=bs, ctx=ctx)
     elif backend == "pipelined":
-        fronts, timings = _factor_pipelined(a, schedule, bs=bs)
+        fronts, timings = _factor_pipelined(a, schedule, bs=bs, ctx=ctx)
     else:
         fronts = _factor_sequential(a, schedule, backend, eff_dtype)
 
@@ -250,7 +276,7 @@ def _assemble_bucket(a: CSRMatrix, schedule: LevelSchedule,
 
 
 def _factor_batched(a: CSRMatrix, schedule: LevelSchedule,
-                    bs: Optional[int] = None
+                    bs: Optional[int] = None, ctx=None
                     ) -> Tuple[List[_Front], dict]:
     """Level-scheduled factorization: per (level, bucket), assemble every
     member front into one padded f32 workspace stack and factor the stack
@@ -265,6 +291,7 @@ def _factor_batched(a: CSRMatrix, schedule: LevelSchedule,
     pending: List[List[Tuple[np.ndarray, np.ndarray]]] = [[] for _ in range(nsup)]
     t_asm = t_sync = 0.0
     for li in range(schedule.nlevels):
+        _check_deadline(ctx, f"batched level {li}/{schedule.nlevels}")
         for bucket in schedule.buckets[li]:
             t0 = pc()
             P = bucket.P
@@ -336,7 +363,7 @@ def _pad_pow2(n: int) -> int:
 
 
 def _factor_pipelined(a: CSRMatrix, schedule: LevelSchedule,
-                      bs: Optional[int] = None
+                      bs: Optional[int] = None, ctx=None
                       ) -> Tuple[List[_Front], dict]:
     """Pipelined device-resident factorization.
 
@@ -363,6 +390,8 @@ def _factor_pipelined(a: CSRMatrix, schedule: LevelSchedule,
     dev: dict = {}             # (level, bucket) -> factored device stack
     t_asm = t_disp = t_sync = 0.0
     for li in range(schedule.nlevels):
+        _check_deadline(ctx, f"pipelined dispatch level "
+                             f"{li}/{schedule.nlevels}")
         for bj, bucket in enumerate(schedule.buckets[li]):
             t0 = pc()
             W = _assemble_bucket(a, schedule, bucket)
@@ -397,6 +426,8 @@ def _factor_pipelined(a: CSRMatrix, schedule: LevelSchedule,
     # drain: the only host↔device sync — by now the host has assembled and
     # dispatched every level, so this wait is whatever device work is left
     for li in range(schedule.nlevels):
+        _check_deadline(ctx, f"pipelined drain level "
+                             f"{li}/{schedule.nlevels}")
         for bj, bucket in enumerate(schedule.buckets[li]):
             t0 = pc()
             Wf = np.asarray(dev[(li, bj)])
