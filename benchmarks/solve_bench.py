@@ -22,16 +22,26 @@ backend (numpy / per-front pallas / level-batched / pipelined):
   residual/iterations,
 * when both run: the max-abs solution difference pipelined vs batched
   (the two share every kernel, so this is 0.0 up to nondeterminism-free
-  reordering — the parity gate).
+  reordering — the parity gate),
+* for the pipelined backend: the **device-sweep leg** — warm
+  ``sweep="device"`` vs host ``"level"`` single-RHS times, raw and
+  *refined* device-vs-host solution parity (the sweeps are f32, so the
+  gated comparison is after fp64 refinement on both sides), the
+  device-resident refinement residual/iterations, and the multi-RHS
+  record: one ``(n, k)`` device solve vs ``k`` per-vector host level
+  sweeps, with the achieved sweep GFLOP/s from
+  ``LevelSchedule.sweep_flops``.
 
 Emits ``BENCH_solve.json`` and exits non-zero when a gate fails:
 ``--gate-residual-fp64`` (numpy backend), ``--gate-residual-refine``
 (batched + refinement), ``--gate-flop-ratio`` (dense-front flops vs
 symbolic model drift), ``--gate-pipelined-parity`` (solution drift vs
-batched), and ``--gate-overlap-margin`` (pipelined overlap efficiency must
-reach this fraction of the batched baseline). CI runs ``--quick`` on the
-interpret backend and uploads the JSON as the second ``BENCH_*``
-trajectory artifact.
+batched), ``--gate-overlap-margin`` (pipelined overlap efficiency must
+reach this fraction of the batched baseline), ``--gate-device-parity``
+(refined device-sweep vs refined host-sweep solution drift), and
+``--gate-rhs-speedup`` (suite-mean multi-RHS device throughput over
+per-vector host sweeps). CI runs ``--quick`` on the interpret backend and
+uploads the JSON as the second ``BENCH_*`` trajectory artifact.
 """
 from __future__ import annotations
 
@@ -48,7 +58,7 @@ from repro.sparse.dataset import (banded, block_arrow, grid2d,
 from repro.sparse.multifrontal import (factor_and_solve_timed,
                                        multifrontal_cholesky,
                                        multifrontal_solve)
-from repro.sparse.refine import refine_solve
+from repro.sparse.refine import refine_solve, refine_solve_device
 from repro.sparse.schedule import build_schedule
 from repro.sparse.symbolic import symbolic_cholesky
 
@@ -69,6 +79,55 @@ def make_suite(scale: float, rng: np.random.Generator) -> List:
         scalefree(d(260), 2, rng, "scalefree"),
         block_arrow(max(4, int(4 * scale)), d(24), 8, rng, "block_arrow"),
     ]
+
+
+def _best(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_sweeps(a, sym, sched, b, repeats: int, rhs_k: int = 8) -> Dict:
+    """The device-sweep leg: warm level vs device single-RHS, refined
+    parity, device-resident refinement, and the multi-RHS throughput
+    record (one (n, k) device dispatch vs k per-vector host sweeps)."""
+    rng = np.random.default_rng(1)
+    f = multifrontal_cholesky(a, sym, backend="pipelined")
+    B = rng.standard_normal((a.n, rhs_k))
+    # warm-up: compile the device sweep buckets for both RHS widths
+    xl = multifrontal_solve(f, b, mode="level")
+    xd = multifrontal_solve(f, b, mode="device")
+    multifrontal_solve(f, B, mode="device")
+    denom = max(float(np.abs(xl).max()), 1e-30)
+    xh, _ = refine_solve(a.matvec,
+                         lambda r_: multifrontal_solve(f, r_, mode="level"),
+                         b)
+    xdr, info = refine_solve_device(a, f, b)
+    level_s = _best(lambda: multifrontal_solve(f, b, mode="level"), repeats)
+    device_s = _best(lambda: multifrontal_solve(f, b, mode="device"),
+                     repeats)
+    device_multi_s = _best(lambda: multifrontal_solve(f, B, mode="device"),
+                           repeats)
+    host_pervec_s = _best(
+        lambda: [multifrontal_solve(f, B[:, j], mode="level")
+                 for j in range(rhs_k)], repeats)
+    return dict(
+        rhs_k=rhs_k,
+        level_s=level_s, device_s=device_s,
+        device_multi_s=device_multi_s, host_pervec_s=host_pervec_s,
+        multi_rhs_speedup=host_pervec_s / max(device_multi_s, 1e-12),
+        sweep_gflops=sched.sweep_flops(rhs_k)
+        / max(device_multi_s, 1e-12) / 1e9,
+        raw_parity=float(np.abs(xd - xl).max()) / denom,     # f32 floor
+        refined_parity=float(np.abs(xdr - xh).max())
+        / max(float(np.abs(xh).max()), 1e-30),
+        residual_device_refined=info.final_residual,
+        refine_iterations_device=info.iterations,
+        refine_converged_device=info.converged,
+    )
 
 
 def bench_matrix(a, backends: List[str], repeats: int) -> Dict:
@@ -151,6 +210,8 @@ def bench_matrix(a, backends: List[str], repeats: int) -> Dict:
         xp = multifrontal_solve(fp_, b)
         denom = max(float(np.abs(xb).max()), 1e-30)
         rec["pipelined_parity_maxdiff"] = float(np.abs(xp - xb).max()) / denom
+    if "pipelined" in bk:
+        rec["sweeps"] = bench_sweeps(a, sym, sched, b, repeats)
     return rec
 
 
@@ -192,6 +253,21 @@ def run_gates(records: List[Dict], args) -> List[str]:
                     f"{r['name']}: pipelined overlap efficiency {op:.2f} "
                     f"< {args.gate_overlap_margin:.2f}× batched baseline "
                     f"{ob:.2f}")
+        if "sweeps" in r:
+            sw = r["sweeps"]
+            if sw["refined_parity"] > args.gate_device_parity:
+                fails.append(f"{r['name']}: refined device-sweep vs "
+                             f"host-sweep drift {sw['refined_parity']:.2e} "
+                             f"> {args.gate_device_parity:.0e}")
+    # throughput is gated on the suite mean: tiny matrices pay fixed
+    # dispatch overhead per call, the wide ones amortize it
+    sp = [r["sweeps"]["multi_rhs_speedup"] for r in records
+          if "sweeps" in r]
+    if sp and float(np.mean(sp)) < args.gate_rhs_speedup:
+        fails.append(f"multi-RHS device sweep speedup mean "
+                     f"{float(np.mean(sp)):.2f}× < "
+                     f"{args.gate_rhs_speedup:.2f}× over per-vector "
+                     f"host sweeps")
     return fails
 
 
@@ -216,6 +292,13 @@ def main(argv=None) -> int:
     p.add_argument("--gate-overlap-margin", type=float, default=0.75,
                    help="pipelined overlap efficiency must be ≥ margin × "
                         "the batched baseline")
+    # the sweeps are f32, so parity is gated after fp64 refinement on both
+    # sides — the raw f32 floor (~1e-7) is recorded but not gated
+    p.add_argument("--gate-device-parity", type=float, default=1e-6,
+                   help="max refined device-sweep vs host-sweep drift")
+    p.add_argument("--gate-rhs-speedup", type=float, default=1.5,
+                   help="min suite-mean multi-RHS device throughput over "
+                        "per-vector host level sweeps")
     p.add_argument("--no-gate", action="store_true")
     args = p.parse_args(argv)
     if args.quick:
@@ -261,6 +344,15 @@ def main(argv=None) -> int:
         print(f"overlap efficiency (host-busy fraction): batched mean "
               f"{float(np.mean([b_ for b_, _ in ov])):.2f}, pipelined mean "
               f"{float(np.mean([p_ for _, p_ in ov])):.2f}")
+    sw = [r["sweeps"] for r in records if "sweeps" in r]
+    if sw:
+        sp_ = [s["multi_rhs_speedup"] for s in sw]
+        print(f"device sweeps: multi-RHS (k={sw[0]['rhs_k']}) speedup over "
+              f"per-vector host sweeps min {min(sp_):.1f}×, mean "
+              f"{float(np.mean(sp_)):.1f}×; sweep GFLOP/s mean "
+              f"{float(np.mean([s['sweep_gflops'] for s in sw])):.3f}; "
+              f"refined parity max "
+              f"{max(s['refined_parity'] for s in sw):.1e}")
 
     if not args.no_gate:
         fails = run_gates(records, args)

@@ -131,6 +131,25 @@ def _render_shadow_panel(m: dict) -> None:
               f"   (counterfactual predicted flops)")
 
 
+def _render_refine_histogram(m: dict) -> None:
+    """Refinement-iteration distribution from the solve.refine_iters.<i>
+    counters (the last bucket, 8, collects everything beyond it)."""
+    counts = {}
+    for k, v in m.items():
+        if k.startswith("solve.refine_iters."):
+            counts[int(k.rsplit(".", 1)[-1])] = int(v)
+    if not counts:
+        return
+    total = sum(counts.values())
+    peak = max(counts.values())
+    print(f"  refine iterations ({total} refined solves, "
+          f"mean {m.get('solve.refine_iterations.mean', 0.0):.1f})")
+    for i in sorted(counts):
+        bar = "█" * max(1, round(counts[i] / peak * 24))
+        label = f"{i}+" if i >= 8 else f"{i} "
+        print(f"    {label} {bar} {counts[i]}")
+
+
 def _render_mesh_panel(m: dict) -> None:
     """Per-shard serving-mesh utilization from the mesh.* instruments."""
     nd = int(m.get("mesh.shards", 0) or 0)
@@ -193,7 +212,8 @@ def render_server(host: str, port: int, show_all_metrics: bool) -> int:
     # its RequestContext spans into stage.* histograms): host assembly vs
     # device-blocked time vs triangular sweeps
     solve_stages = [st for st in ("permute", "factor", "factor.assemble",
-                                  "factor.device", "solve.sweep")
+                                  "factor.device", "solve.sweep",
+                                  "solve.refine")
                     if f"stage.{st}.p50" in m]
     if solve_stages:
         print("solve stages")
@@ -205,6 +225,14 @@ def render_server(host: str, port: int, show_all_metrics: bool) -> int:
         if ov is not None:
             print(f"  overlap efficiency {ov:.2f} "
                   f"(host-busy fraction of assembly + device wait)")
+        # which triangular-sweep substrate served the solves
+        modes = {k.rsplit(".", 1)[-1]: int(m[k]) for k in m
+                 if k.startswith("solve.sweep.") and k.count(".") == 2}
+        if modes:
+            print("  sweep backends  "
+                  + "  ".join(f"{mode}={cnt}"
+                              for mode, cnt in sorted(modes.items())))
+        _render_refine_histogram(m)
     _render_shadow_panel(m)
     _render_mesh_panel(m)
     print(f"queue       depth {s.get('queue_depth', 0)}"

@@ -54,6 +54,9 @@ DEFAULT_AUTOTUNE_DIR = os.path.join("artifacts", "autotune")
 
 #: default candidate grid: panel-width caps × pad policies
 DEFAULT_BS_GRID: Tuple[Optional[int], ...] = (16, 32, 64)
+#: stage-2 grid: device-sweep tri-solve panel caps × RHS tile widths
+DEFAULT_SWEEP_BS_GRID: Tuple[Optional[int], ...] = (None, 16)
+DEFAULT_RT_GRID: Tuple[Optional[int], ...] = (None, 8)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +69,13 @@ class SolvePolicy:
     backend: str = "batched"     # backend the timing loop ran
     warm_factor_s: float = 0.0   # best measured warm factor time (suite sum)
     source: str = "default"      # "default" | "tuned" | "cached"
+    # device-sweep knobs (sweep="device"): tri-solve panel cap and RHS
+    # tile width, measured in the stage-2 grid over warm multi-RHS solves
+    # (None = kernel defaults; absent in pre-sweep records, defaulted on
+    # load)
+    sweep_bs: Optional[int] = None
+    rt: Optional[int] = None
+    warm_sweep_s: float = 0.0    # best measured warm device-solve time
 
     def to_json(self) -> dict:
         return dict(schema=SCHEMA, **dataclasses.asdict(self))
@@ -167,15 +177,22 @@ def _default_suite():
 def tune(mats=None, *, backend: str = "pipelined",
          bs_grid: Sequence[Optional[int]] = DEFAULT_BS_GRID,
          pads: Optional[Sequence[str]] = None, repeats: int = 2,
+         sweep_bs_grid: Sequence[Optional[int]] = DEFAULT_SWEEP_BS_GRID,
+         rt_grid: Sequence[Optional[int]] = DEFAULT_RT_GRID,
          bench_path: str = "BENCH_solve.json",
          out_dir: Optional[str] = DEFAULT_AUTOTUNE_DIR) -> SolvePolicy:
     """Measure the candidate grid and persist the winner for this device.
 
-    Per (pad, bs): one cold factorization (compile) then ``repeats`` warm
-    factorizations of every suite matrix; the score is the summed best warm
-    factor time. ``out_dir=None`` skips persistence (pure measurement).
+    Stage 1, per (pad, bs): one cold factorization (compile) then
+    ``repeats`` warm factorizations of every suite matrix; the score is the
+    summed best warm factor time. Stage 2 re-factors once with the stage-1
+    winner and grids the device-sweep knobs (tri-solve panel cap ×
+    RHS tile) over warm multi-RHS ``sweep="device"`` solves.
+    ``out_dir=None`` skips persistence (pure measurement).
     """
-    from repro.sparse.multifrontal import factor_and_solve_timed
+    from repro.sparse.multifrontal import (factor_and_solve_timed,
+                                           multifrontal_cholesky,
+                                           multifrontal_solve)
     from repro.sparse.symbolic import symbolic_cholesky
 
     if mats is None:
@@ -199,8 +216,33 @@ def tune(mats=None, *, backend: str = "pipelined",
                 total += best
             results[(pad, bs)] = total
     (pad, bs), t_best = min(results.items(), key=lambda kv: kv[1])
+
+    # stage 2: device-sweep knobs over the winning factorization policy
+    facs = [multifrontal_cholesky(a, sym=sym, backend=backend,
+                                  pad=pad, bs=bs)
+            for a, sym in zip(mats, syms)]
+    rhss = [np.random.default_rng(1).standard_normal((a.n, 4))
+            for a in mats]
+    sweep_results: Dict[Tuple[Optional[int], Optional[int]], float] = {}
+    for sbs in sweep_bs_grid:
+        for rt in rt_grid:
+            total = 0.0
+            for f, B in zip(facs, rhss):
+                multifrontal_solve(f, B, mode="device",
+                                   sweep_bs=sbs, rt=rt)  # cold/compile
+                best = float("inf")
+                for _ in range(max(repeats, 1)):
+                    t0 = time.perf_counter()
+                    multifrontal_solve(f, B, mode="device",
+                                       sweep_bs=sbs, rt=rt)
+                    best = min(best, time.perf_counter() - t0)
+                total += best
+            sweep_results[(sbs, rt)] = total
+    (sweep_bs, rt), t_sweep = min(sweep_results.items(),
+                                  key=lambda kv: kv[1])
     policy = SolvePolicy(bs=bs, pad=pad, device_kind=kind, backend=backend,
-                         warm_factor_s=t_best, source="tuned")
+                         warm_factor_s=t_best, source="tuned",
+                         sweep_bs=sweep_bs, rt=rt, warm_sweep_s=t_sweep)
     if out_dir:
         save_policy(policy, out_dir)
     return policy

@@ -229,7 +229,7 @@ class PlanBuilder:
 #: solve-stage names as they appear in RequestContext spans and in the
 #: metrics registry (``stage.<name>`` histograms, seconds)
 SOLVE_STAGES = ("permute", "factor", "factor.assemble", "factor.device",
-                "solve", "solve.sweep")
+                "solve", "solve.sweep", "solve.refine")
 
 
 def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
@@ -239,6 +239,9 @@ def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
                  solve_dtype: str = "fp64",
                  pad: str = "pow2",
                  bs: Optional[int] = None,
+                 sweep: str = "auto",
+                 sweep_bs: Optional[int] = None,
+                 rt: Optional[int] = None,
                  ctx: Optional[RequestContext] = None,
                  metrics=None) -> dict:
     """Numeric factor + solve of ``A x = b`` driven entirely by the plan.
@@ -258,17 +261,32 @@ def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
     ``solve_pad``) — a cached plan always tells which numeric path and
     policy last produced results from it.
 
+    ``sweep`` picks the triangular-sweep substrate for the solve phase
+    (``auto``/``seq``/``level``/``device`` — see
+    :func:`repro.sparse.multifrontal.multifrontal_solve`), with
+    ``sweep_bs``/``rt`` the device-sweep panel/RHS-tile knobs. The f32
+    device sweeps auto-promote ``fp64`` to ``fp32_refine`` exactly like
+    the device factor backends, and with ``sweep="device"`` the
+    refinement loop itself runs device-resident
+    (:func:`repro.sparse.refine.refine_solve_device`). ``b`` may be a
+    single RHS ``(n,)`` or a block ``(n, k)``.
+
     A :class:`RequestContext` gets ``permute``/``factor``/``solve`` spans
     plus the solve-stage breakdown ``factor.assemble`` / ``factor.device``
-    / ``solve.sweep`` (host assembly vs device-blocked vs triangular
-    sweeps) on the level-scheduled backends; a
-    :class:`repro.core.metrics.MetricsRegistry` passed as ``metrics``
-    mirrors every span into ``stage.<name>`` histograms and records the
-    backend's ``solve.overlap_efficiency`` gauge.
+    / ``solve.sweep`` / ``solve.refine`` (host assembly vs device-blocked
+    vs triangular sweeps vs residual evaluation) on the level-scheduled
+    backends; a :class:`repro.core.metrics.MetricsRegistry` passed as
+    ``metrics`` mirrors every span into ``stage.<name>`` histograms and
+    records the backend's ``solve.overlap_efficiency`` gauge, the sweep
+    substrate (``solve.sweep.<mode>`` counters) and the refinement
+    behavior (``solve.refine_iterations`` histogram plus per-count
+    ``solve.refine_iters.<i>`` counters).
     """
     assert a.data is not None, "numeric execution needs values"
     if solve_dtype not in ("fp64", "fp32", "fp32_refine"):
         raise ValueError(f"unknown solve_dtype {solve_dtype!r}")
+    if sweep not in ("auto", "seq", "level", "device"):
+        raise ValueError(f"unknown sweep {sweep!r}")
     if b is None:
         b = np.random.default_rng(0).standard_normal(a.n)
     perm = plan.perm
@@ -278,14 +296,15 @@ def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
 
     refine_info = None
     eff_dtype = solve_dtype
+    eff_sweep = sweep
     fstats: dict = {}
     t0 = time.perf_counter()
     if solver == "multifrontal":
         from repro.sparse.multifrontal import (multifrontal_cholesky,
                                                multifrontal_solve)
         if (backend in ("pallas", "batched", "pipelined")
-                and solve_dtype == "fp64"):
-            eff_dtype = "fp32_refine"  # these backends factor in f32
+                or sweep == "device") and solve_dtype == "fp64":
+            eff_dtype = "fp32_refine"  # f32 factor and/or f32 sweeps
         dtype = np.float64 if eff_dtype == "fp64" else np.float32
         # ctx rides into the numeric phase: the level-scheduled backends
         # re-check the deadline at level boundaries and abandon the
@@ -295,16 +314,29 @@ def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
         fstats = f.stats
         t_fac = time.perf_counter() - t0
         t0 = time.perf_counter()
-        pb = b[perm]
-        if eff_dtype == "fp32_refine":
+        if eff_sweep == "auto":
+            eff_sweep = "seq" if f.schedule is None else "level"
+        # hoisted: one permute + fp64 cast of the RHS, outside any
+        # refinement loop (the closures below only ever see residuals)
+        pb = np.ascontiguousarray(b[perm], dtype=np.float64)
+        if eff_dtype == "fp32_refine" and eff_sweep == "device":
+            from repro.sparse.refine import refine_solve_device
+            z, refine_info = refine_solve_device(pa, f, pb,
+                                                 sweep_bs=sweep_bs, rt=rt)
+        elif eff_dtype == "fp32_refine":
             from repro.sparse.refine import refine_solve
             z, refine_info = refine_solve(
-                pa.matvec, lambda r: multifrontal_solve(f, r), pb)
+                pa.matvec,
+                lambda r: multifrontal_solve(f, r, mode=eff_sweep,
+                                             sweep_bs=sweep_bs, rt=rt),
+                pb)
         else:
-            z = multifrontal_solve(f, pb)
+            z = multifrontal_solve(f, pb, mode=eff_sweep,
+                                   sweep_bs=sweep_bs, rt=rt)
     elif solver == "simplicial":
         from repro.sparse.numeric import cholesky_solve, sparse_cholesky
         eff_dtype = "fp64"  # simplicial path is host fp64 only
+        eff_sweep = "seq"
         f = sparse_cholesky(pa, sym=plan.sym)
         t_fac = time.perf_counter() - t0
         t0 = time.perf_counter()
@@ -314,10 +346,14 @@ def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
     t_sol = time.perf_counter() - t0
 
     # solve-stage breakdown: host assembly vs device-blocked time comes
-    # from the backend's own timers; the triangular sweeps are the whole
-    # of t_sol on the non-refined path and dominated by it otherwise
+    # from the backend's own timers; on the refined paths the solve splits
+    # into triangular sweeps vs residual evaluation (RefineInfo timers),
+    # otherwise the sweeps are the whole of t_sol
     spans = {"permute": t_perm, "factor": t_fac, "solve": t_sol,
              "solve.sweep": t_sol}
+    if refine_info is not None:
+        spans["solve.sweep"] = refine_info.t_sweep
+        spans["solve.refine"] = refine_info.t_residual
     if "t_factor_assemble" in fstats:
         spans["factor.assemble"] = fstats["t_factor_assemble"]
         spans["factor.device"] = (fstats.get("t_factor_dispatch", 0.0)
@@ -332,6 +368,12 @@ def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
             metrics.gauge("solve.overlap_efficiency").set(
                 fstats["overlap_efficiency"])
         metrics.counter("solve.requests").inc()
+        metrics.counter(f"solve.sweep.{eff_sweep}").inc()
+        if refine_info is not None:
+            metrics.histogram("solve.refine_iterations").observe(
+                float(refine_info.iterations))
+            metrics.counter(
+                f"solve.refine_iters.{min(refine_info.iterations, 8)}").inc()
     x = np.empty_like(z)
     x[perm] = z
     resid = float(np.linalg.norm(a.matvec(x) - b)
@@ -340,10 +382,12 @@ def execute_plan(a: CSRMatrix, plan: ExecutionPlan,
     plan.meta["solve_dtype"] = eff_dtype
     plan.meta["solve_bs"] = bs
     plan.meta["solve_pad"] = pad
+    plan.meta["solve_sweep"] = eff_sweep
     return dict(x=x, time=t_perm + t_fac + t_sol, t_permute=t_perm,
                 t_factor=t_fac, t_solve=t_sol, residual=resid,
                 algorithm=plan.algorithm, solver=solver,
                 backend=backend, solve_dtype=eff_dtype, bs=bs, pad=pad,
+                sweep=eff_sweep, rt=rt,
                 overlap_efficiency=fstats.get("overlap_efficiency"),
                 refine_iterations=(None if refine_info is None
                                    else refine_info.iterations),

@@ -78,6 +78,12 @@ class EngineConfig:
     solver: str = "multifrontal"  # or "simplicial"
     backend: str = "numpy"
     solve_dtype: str = "fp64"
+    # triangular-sweep substrate for the solve phase: "auto" (level sweeps
+    # when the factor has a schedule), "seq" per-front reference, "level"
+    # host level-batched, "device" batched Pallas substitution kernels on
+    # device-resident factor stacks (f32 — pairs with refinement exactly
+    # like the device factor backends)
+    sweep: str = "auto"
     # autotuned bucket/block policy (repro.autotune.solve_tuner): when
     # autotune_solve is True the engine loads (or measures, on first use)
     # the per-device-kind SolvePolicy from autotune_dir and threads its
@@ -111,10 +117,17 @@ class EngineConfig:
         if self.solve_dtype not in ("fp64", "fp32", "fp32_refine"):
             raise ValueError(f"solve_dtype must be 'fp64', 'fp32' or "
                              f"'fp32_refine', got {self.solve_dtype!r}")
+        if self.sweep not in ("auto", "seq", "level", "device"):
+            raise ValueError(f"sweep must be 'auto', 'seq', 'level' or "
+                             f"'device', got {self.sweep!r}")
         if (self.solve_dtype == "fp64"
-                and self.backend in ("pallas", "batched", "pipelined")):
+                and (self.backend in ("pallas", "batched", "pipelined")
+                     or self.sweep == "device")):
+            what = (f"backend {self.backend!r} factors"
+                    if self.backend != "numpy" or self.sweep != "device"
+                    else "sweep 'device' solves")
             warnings.warn(
-                f"backend {self.backend!r} factors in fp32; solve_dtype "
+                f"{what} in fp32; solve_dtype "
                 f"'fp64' will run as 'fp32_refine' (fp32 factorization + "
                 f"fp64 iterative refinement). Set solve_dtype="
                 f"'fp32_refine' explicitly to silence this.",

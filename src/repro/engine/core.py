@@ -257,6 +257,9 @@ class SolverEngine:
         pol = self.solve_policy
         return dict(solver=cfg.solver, backend=cfg.backend,
                     solve_dtype=cfg.solve_dtype, pad=pol.pad, bs=pol.bs,
+                    sweep=cfg.sweep,
+                    sweep_bs=getattr(pol, "sweep_bs", None),
+                    rt=getattr(pol, "rt", None),
                     metrics=self.metrics)
 
     def solve(self, a, b: Optional[np.ndarray] = None,

@@ -19,6 +19,16 @@ Pallas kernels over 128-aligned VMEM tiles:
                       fused, f32 accumulate) entirely in VMEM. One launch
                       factors every same-shape front of an assembly-tree
                       level — no per-front host round trips.
+* ``tri_solve_batch`` — the level-scheduled *substitution* workhorse: one
+                      grid program runs the whole blocked forward (``L y =
+                      b``) or backward (``Lᵀ x = y``) substitution of one
+                      front's RHS slab, reusing ``tri_inv_tile``'s block
+                      inverse so every panel step is matmul-shaped. The RHS
+                      dim is tiled by the grid (multi-RHS solves stream
+                      column slabs through the same factor block), which is
+                      what makes ``sweep="device"`` in
+                      :func:`repro.sparse.multifrontal.multifrontal_solve`
+                      one async kernel dispatch per level-bucket.
 * ``extend_add_batch`` — the on-device extend-add: accumulates a stack of
                       child Schur update blocks into parent front workspaces
                       from a precomputed row map. The irregular scatter is
@@ -45,7 +55,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["chol_tile", "tri_inv_tile", "matmul_nt", "frontal_factor_batch",
-           "extend_add_batch"]
+           "extend_add_batch", "tri_solve_batch"]
 
 
 # ---------------------------------------------------------------------------
@@ -274,6 +284,94 @@ def extend_add_batch(w: jax.Array, u: jax.Array, dst: jax.Array,
         input_output_aliases={3: 0},  # w (4th operand incl. prefetch) → out
         interpret=interpret,
     )(dst, u, rows, w)
+
+
+def _tri_solve_batch_kernel(l_ref, b_ref, o_ref, *, npanels: int, bs: int,
+                            lower: bool):
+    """Blocked triangular substitution of one (P, K) RHS slab.
+
+    ``lower=True`` solves ``L X = B`` top-down; ``lower=False`` solves
+    ``Lᵀ X = B`` bottom-up (``l_ref`` always holds the *lower* factor — the
+    transpose lives in the contraction dims, not in memory). Each panel
+    step inverts the (bs, bs) diagonal block via :func:`_tri_inv_block`
+    and applies it as a matmul, so the only sequential work is the
+    fori_loop inside the tiny block inverse. The panel loop is a static
+    unroll (npanels is a bucket constant). Unit-diagonal padding rows in
+    the factor are decoupled identity rows: they pass their RHS entries
+    through untouched, which is what lets padded slots carry garbage
+    ("trash row" gathers) without contaminating real rows.
+    """
+    L = l_ref[...][0].astype(jnp.float32)           # (P, P)
+    X = b_ref[...][0].astype(jnp.float32)           # (P, K)
+    P, K = X.shape
+    if lower:
+        for t in range(npanels):
+            lo = t * bs
+            ltt = jax.lax.dynamic_slice(L, (lo, lo), (bs, bs))
+            inv = _tri_inv_block(ltt)
+            xp = jax.lax.dot_general(
+                inv, jax.lax.dynamic_slice(X, (lo, 0), (bs, K)),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            X = jax.lax.dynamic_update_slice(X, xp, (lo, 0))
+            below = P - lo - bs
+            if below:
+                pan = jax.lax.dynamic_slice(L, (lo + bs, lo), (below, bs))
+                tail = jax.lax.dynamic_slice(X, (lo + bs, 0), (below, K))
+                tail = tail - jax.lax.dot_general(
+                    pan, xp, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                X = jax.lax.dynamic_update_slice(X, tail, (lo + bs, 0))
+    else:
+        for t in range(npanels - 1, -1, -1):
+            lo = t * bs
+            ltt = jax.lax.dynamic_slice(L, (lo, lo), (bs, bs))
+            inv = _tri_inv_block(ltt)
+            rhs = jax.lax.dynamic_slice(X, (lo, 0), (bs, K))
+            below = P - lo - bs
+            if below:
+                pan = jax.lax.dynamic_slice(L, (lo + bs, lo), (below, bs))
+                tail = jax.lax.dynamic_slice(X, (lo + bs, 0), (below, K))
+                rhs = rhs - jax.lax.dot_general(
+                    pan, tail, (((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+            xp = jax.lax.dot_general(           # (L_tt)⁻ᵀ rhs = invᵀ @ rhs
+                inv, rhs, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            X = jax.lax.dynamic_update_slice(X, xp, (lo, 0))
+    o_ref[...] = X[None].astype(o_ref.dtype)
+
+
+def tri_solve_batch(l: jax.Array, x: jax.Array, *, bs: int,
+                    kt: int | None = None, lower: bool = True,
+                    interpret: bool = False) -> jax.Array:
+    """Batched blocked triangular substitution over a stack of fronts.
+
+    ``l``: (B, P, P) lower factors (unit-diagonal identity padding beyond
+    each front's true pivot count). ``x``: (B, P, K) RHS slabs. Solves
+    ``L Y = X`` (``lower=True``) or ``Lᵀ Y = X`` per batch member in one
+    launch: the grid is (B, K // kt), so each program owns one front's
+    (P, kt) RHS tile — ``kt`` (default: the whole K) is the RHS-tile policy
+    knob that turns multi-RHS solves into independent column slabs.
+    """
+    B, P, P2 = l.shape
+    K = x.shape[2]
+    kt = K if kt is None else kt
+    assert P == P2 and x.shape == (B, P, K), (l.shape, x.shape)
+    assert P % bs == 0 and K % kt == 0, (P, bs, K, kt)
+    kernel = functools.partial(_tri_solve_batch_kernel, npanels=P // bs,
+                               bs=bs, lower=lower)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, K // kt),
+        in_specs=[
+            pl.BlockSpec((1, P, P), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, P, kt), lambda b, j: (b, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, P, kt), lambda b, j: (b, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, P, K), x.dtype),
+        interpret=interpret,
+    )(l, x)
 
 
 def frontal_factor_batch(w: jax.Array, npiv: int, *, bs: int,

@@ -22,12 +22,14 @@ from .flash_attention import flash_attention
 from .frontal_cholesky import (chol_tile, extend_add_batch as
                                _extend_add_batch_kernel, frontal_factor_batch
                                as _frontal_factor_batch_kernel, matmul_nt,
-                               tri_inv_tile)
+                               tri_inv_tile, tri_solve_batch as
+                               _tri_solve_batch_kernel)
 from .spmv_bell import bell_spmv, csr_to_bell
 
 __all__ = ["attention", "frontal_factor", "frontal_factor_batch",
            "frontal_factor_batch_ws", "extend_add_batch", "pick_block_size",
-           "spmv", "matmul_nt_padded"]
+           "spmv", "matmul_nt_padded", "tri_solve_batch", "rhs_tile",
+           "sweep_forward", "sweep_backward"]
 
 
 def _interpret() -> bool:
@@ -234,6 +236,102 @@ def frontal_factor_batch(fs: jax.Array, npiv: int, *, bs: int | None = None
     S = W[:, P:, P:]
     S = jnp.tril(S) + jnp.swapaxes(jnp.tril(S, -1), 1, 2)
     return L11, L21, S
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "kt", "lower",
+                                             "interpret"))
+def _tri_solve_jit(l, x, bs, kt, lower, interpret):
+    return _tri_solve_batch_kernel(l, x, bs=bs, kt=kt, lower=lower,
+                                   interpret=interpret)
+
+
+def rhs_tile(k: int, rt: int | None = None) -> int:
+    """Effective RHS-tile width: ``rt`` when it divides the RHS count,
+    else the whole slab (one tile). The autotuned ``rt`` policy knob only
+    kicks in when the caller's padded RHS width actually tiles by it."""
+    if rt is None or k <= 0:
+        return max(k, 1)
+    rt = max(1, int(rt))
+    return rt if k % rt == 0 else k
+
+
+def tri_solve_batch(l: jax.Array, x: jax.Array, *, bs: int | None = None,
+                    rt: int | None = None, lower: bool = True) -> jax.Array:
+    """Batched blocked triangular substitution (see
+    :func:`repro.kernels.frontal_cholesky.tri_solve_batch`).
+
+    ``l``: (B, P, P) lower factors, ``x``: (B, P, K) RHS slabs; solves
+    ``L Y = X`` or ``Lᵀ Y = X``. ``bs`` caps the panel width (same
+    divisor-descent policy as the factor kernels); ``rt`` tiles the RHS
+    dim (K is zero-padded up to a multiple). Calls jit-cache per
+    (B, P, K, bs, kt) — bucketed P's are powers of two, so a handful of
+    compilations cover a whole sweep schedule.
+    """
+    l = jnp.asarray(l, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    B, P, _ = l.shape
+    K = x.shape[2]
+    bse = pick_block_size(P, bs)
+    if rt is not None and K % max(1, int(rt)):
+        x = _pad_to(x, 2, max(1, int(rt)))
+    kt = rhs_tile(x.shape[2], rt)
+    out = _tri_solve_jit(l, x, bse, kt, lower, _interpret())
+    return out[:, :, :K] if out.shape[2] != K else out
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "kt", "interpret"))
+def _sweep_fwd_jit(x, l11, l21, piv, rest, bs, kt, interpret):
+    k = x.shape[1]
+    xb = jnp.take(x, piv, axis=0)                         # (B, P, k)
+    y = _tri_solve_batch_kernel(l11, xb, bs=bs, kt=kt, lower=True,
+                                interpret=interpret)
+    x = x.at[piv.reshape(-1)].set(y.reshape(-1, k))
+    if l21.shape[1]:
+        upd = jnp.einsum("brp,bpk->brk", l21, y)
+        x = x.at[rest.reshape(-1)].add(-upd.reshape(-1, k))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "kt", "interpret"))
+def _sweep_bwd_jit(x, l11, l21, piv, rest, bs, kt, interpret):
+    k = x.shape[1]
+    rhs = jnp.take(x, piv, axis=0)                        # (B, P, k)
+    if l21.shape[1]:
+        xr = jnp.take(x, rest, axis=0)                    # (B, R, k)
+        rhs = rhs - jnp.einsum("brp,brk->bpk", l21, xr)
+    y = _tri_solve_batch_kernel(l11, rhs, bs=bs, kt=kt, lower=False,
+                                interpret=interpret)
+    return x.at[piv.reshape(-1)].set(y.reshape(-1, k))
+
+
+def sweep_forward(x: jax.Array, l11: jax.Array, l21: jax.Array,
+                  piv: jax.Array, rest: jax.Array, *, bs: int | None = None,
+                  rt: int | None = None) -> jax.Array:
+    """One level-bucket's forward-substitution step on a device-resident
+    RHS block.
+
+    ``x``: (n + 1, K) f32 — the solution-in-progress with a trailing
+    "trash row" that every padded index points at (garbage in, garbage
+    confined: identity pad rows in ``l11`` and zero pad rows/cols in
+    ``l21`` keep it inert). Gathers the bucket's pivot rows, runs the
+    batched :func:`tri_solve_batch` lower sweep, scatters the solved
+    pivots back, and scatter-subtracts the ``L21 y`` cross-front updates —
+    all inside one jit, dispatched asynchronously.
+    """
+    return _sweep_fwd_jit(x, l11, l21, piv, rest,
+                          pick_block_size(l11.shape[1], bs),
+                          rhs_tile(x.shape[1], rt), _interpret())
+
+
+def sweep_backward(x: jax.Array, l11: jax.Array, l21: jax.Array,
+                   piv: jax.Array, rest: jax.Array, *, bs: int | None = None,
+                   rt: int | None = None) -> jax.Array:
+    """One level-bucket's backward-substitution step (``Lᵀ x = y``):
+    gathers pivot and update rows, subtracts the ``L21ᵀ`` coupling, runs
+    the batched upper sweep, and scatters the solved pivots back."""
+    return _sweep_bwd_jit(x, l11, l21, piv, rest,
+                          pick_block_size(l11.shape[1], bs),
+                          rhs_tile(x.shape[1], rt), _interpret())
 
 
 def spmv(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray,

@@ -58,31 +58,40 @@ def _bell_kernel(idx_ref, blocks_ref, x_ref, o_ref, *, max_k: int):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    blk = blocks_ref[0, 0].astype(jnp.float32)       # (bs, bs)
-    xb = x_ref[...].astype(jnp.float32)               # (bs, 1)
-    o_ref[...] += jnp.dot(blk, xb, preferred_element_type=jnp.float32
+    # Accumulate in the output dtype: f32 normally, f64 when the caller runs
+    # under the x64 context (device-resident refinement residuals).
+    acc = jnp.float64 if o_ref.dtype == jnp.float64 else jnp.float32
+    blk = blocks_ref[0, 0].astype(acc)                # (bs, bs)
+    xb = x_ref[...].astype(acc)                       # (bs, kk)
+    o_ref[...] += jnp.dot(blk, xb, preferred_element_type=acc
                           ).astype(o_ref.dtype)
 
 
 def bell_spmv(blocks: jax.Array, idx: jax.Array, x: jax.Array, *,
               interpret: bool = False) -> jax.Array:
-    """y = A @ x with A in block-ELL form. x: (n_pad,). Returns (n_pad,)."""
+    """y = A @ x with A in block-ELL form.
+
+    x: ``(n_pad,)`` or an RHS block ``(n_pad, k)``; the result matches x's
+    shape and dtype (fp64 in/out when running under ``enable_x64``).
+    """
     nrb, max_k, bs, _ = blocks.shape
-    x2 = x.reshape(nrb, bs).reshape(nrb * bs, 1)
+    single = x.ndim == 1
+    x2 = x[:, None] if single else x
+    kk = x2.shape[1]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nrb, max_k),
         in_specs=[
             pl.BlockSpec((1, 1, bs, bs), lambda r, k, idx_ref: (r, k, 0, 0)),
-            pl.BlockSpec((bs, 1), lambda r, k, idx_ref: (idx_ref[r, k], 0)),
+            pl.BlockSpec((bs, kk), lambda r, k, idx_ref: (idx_ref[r, k], 0)),
         ],
-        out_specs=pl.BlockSpec((bs, 1), lambda r, k, idx_ref: (r, 0)),
+        out_specs=pl.BlockSpec((bs, kk), lambda r, k, idx_ref: (r, 0)),
         scratch_shapes=[],
     )
     out = pl.pallas_call(
         functools.partial(_bell_kernel, max_k=max_k),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((nrb * bs, 1), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((nrb * bs, kk), x.dtype),
         interpret=interpret,
     )(idx, blocks, x2)
-    return out[:, 0]
+    return out[:, 0] if single else out

@@ -104,10 +104,16 @@ class CSRMatrix:
 
     # -- arithmetic helpers (host side; the device path lives in kernels/) --
     def matvec(self, x: np.ndarray) -> np.ndarray:
+        """A @ x for a single RHS ``(n,)`` or an RHS block ``(n, k)``."""
         assert self.data is not None
-        out = np.zeros(self.n, dtype=np.result_type(self.data, x))
-        np.add.at(out, np.repeat(np.arange(self.n), self.row_lengths()),
-                  self.data * x[self.indices])
+        rows = np.repeat(np.arange(self.n), self.row_lengths())
+        if x.ndim == 1:
+            out = np.zeros(self.n, dtype=np.result_type(self.data, x))
+            np.add.at(out, rows, self.data * x[self.indices])
+        else:
+            out = np.zeros((self.n, x.shape[1]),
+                           dtype=np.result_type(self.data, x))
+            np.add.at(out, rows, self.data[:, None] * x[self.indices])
         return out
 
 

@@ -33,8 +33,23 @@ factorizations of fronts — matmul-shaped work for the MXU. Four backends:
 
 The triangular solves are level-batched too: :func:`multifrontal_solve`
 stacks each level's factors into (B, P, P)/(B, R, P) tensors once and runs
-batched substitution sweeps (one LAPACK/einsum call per level-bucket)
-instead of a per-front scipy loop.
+batched substitution sweeps per level-bucket. Three sweep modes, all
+native multi-RHS (``b`` of shape ``(n,)`` or ``(n, k)``):
+
+* ``seq``    — per-front scipy loop (fp64 reference).
+* ``level``  — host sweeps: one ``np.linalg.solve`` + einsum per
+               level-bucket, cross-front updates accumulated per *level*
+               with one ``np.bincount`` scatter-add.
+* ``device`` — the solve-phase counterpart of the pipelined backend:
+               per-level factor stacks stay device-resident (reused
+               directly from a pipelined factorization's workspaces, no
+               drain round-trip), each level-bucket is ONE asynchronously
+               dispatched jit step (gather pivots → batched Pallas
+               :func:`repro.kernels.ops.tri_solve_batch` → scatter +
+               ``L21`` update), and the only host↔device sync is fetching
+               the solution at the end. Factors and sweeps run in f32 —
+               pair with :func:`repro.sparse.refine.refine_solve_device`
+               (x/r stay device-resident too) to reach fp64 residuals.
 
 Per-front cost is exactly the symbolic model of
 :func:`repro.sparse.symbolic.cholesky_flops`, so measured label times and the
@@ -96,6 +111,13 @@ class MultifrontalFactor:
     schedule: Optional[LevelSchedule] = None
     dtype: np.dtype = np.float64
     _sweeps: Optional["_LevelSweeps"] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    # pipelined backend: the factored per-(level, bucket) workspace stacks,
+    # kept device-resident so sweep="device" reads L11/L21 straight from
+    # them instead of re-uploading drained host fronts
+    _device_stacks: Optional[dict] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _dev_sweeps: Optional["_DeviceSweeps"] = dataclasses.field(
         default=None, repr=False, compare=False)
 
 
@@ -201,11 +223,13 @@ def multifrontal_cholesky(
     eff_dtype = np.dtype(np.float32 if backend in DEVICE_BACKENDS else dtype)
 
     timings: dict = {}
+    device_stacks = None
     _check_deadline(ctx, "factorization start")
     if backend == "batched":
         fronts, timings = _factor_batched(a, schedule, bs=bs, ctx=ctx)
     elif backend == "pipelined":
-        fronts, timings = _factor_pipelined(a, schedule, bs=bs, ctx=ctx)
+        fronts, timings, device_stacks = _factor_pipelined(a, schedule,
+                                                           bs=bs, ctx=ctx)
     else:
         fronts = _factor_sequential(a, schedule, backend, eff_dtype)
 
@@ -215,7 +239,8 @@ def multifrontal_cholesky(
                  nnz_L=sym.nnz_L, fill=sym.fill, sym_flops=sym.flops,
                  backend=backend, dtype=str(eff_dtype), bs=bs, **timings)
     return MultifrontalFactor(a.n, fronts, sym, stats, schedule=schedule,
-                              dtype=eff_dtype)
+                              dtype=eff_dtype,
+                              _device_stacks=device_stacks)
 
 
 def _factor_sequential(a: CSRMatrix, schedule: LevelSchedule,
@@ -364,7 +389,7 @@ def _pad_pow2(n: int) -> int:
 
 def _factor_pipelined(a: CSRMatrix, schedule: LevelSchedule,
                       bs: Optional[int] = None, ctx=None
-                      ) -> Tuple[List[_Front], dict]:
+                      ) -> Tuple[List[_Front], dict, dict]:
     """Pipelined device-resident factorization.
 
     Producer/consumer split: the host's only numeric work is scattering A's
@@ -377,7 +402,10 @@ def _factor_pipelined(a: CSRMatrix, schedule: LevelSchedule,
     on device until its members' parents have consumed it via
     :func:`repro.kernels.ops.extend_add_batch`); the single blocking sync
     is the drain at the end that fetches the factored stacks for the
-    host-side triangular sweeps.
+    host-side triangular sweeps. The factored device stacks are *also*
+    returned (third element) and retained on the factor: ``sweep="device"``
+    slices L11/L21 straight out of them, so device sweeps never re-upload
+    the factors the drain just pulled down.
     """
     import jax.numpy as jnp
 
@@ -440,7 +468,7 @@ def _factor_pipelined(a: CSRMatrix, schedule: LevelSchedule,
                 L21 = Wf[bi, P : P + fp.nrest, : fp.npiv]
                 fronts[k] = _Front((fp.c0, fp.c1), fp.rows, L11, L21)
             t_asm += pc() - t0
-    return fronts, _overlap_timings(t_asm, t_disp, t_sync)  # type: ignore[return-value]
+    return fronts, _overlap_timings(t_asm, t_disp, t_sync), dev  # type: ignore[return-value]
 
 
 # ---------------------------------------------------------------------------
@@ -499,41 +527,53 @@ def _build_sweeps(f: MultifrontalFactor) -> _LevelSweeps:
     return _LevelSweeps(levels)
 
 
-def _solve_level(f: MultifrontalFactor, b: np.ndarray) -> np.ndarray:
-    """Level-batched forward/backward sweeps: one batched triangular solve
-    (``np.linalg.solve`` on the stacked unit-padded factors) plus one
-    batched update einsum per level-bucket, instead of a scipy call per
-    front. Update scatters within a level never collide with that level's
-    pivots (parents live on strictly higher levels), so bucket order is
-    free and cross-front accumulation uses ``np.subtract.at``."""
+def _solve_level(f: MultifrontalFactor, x: np.ndarray) -> None:
+    """Level-batched forward/backward sweeps, in place on the (n, k) fp64
+    RHS block: one batched triangular solve (``np.linalg.solve`` on the
+    stacked unit-padded factors) plus one batched update einsum per
+    level-bucket, instead of a scipy call per front. Update scatters within
+    a level never collide with that level's pivots (parents live on
+    strictly higher levels), so bucket order is free and every bucket's
+    cross-front updates are deferred and applied in ONE ``np.bincount``
+    scatter-add per level (a dense accumulate, much faster than the
+    element-at-a-time ``np.subtract.at``)."""
     if f._sweeps is None:
         f._sweeps = _build_sweeps(f)
     sw = f._sweeps
-    x = b.astype(np.float64).copy()
+    n, k = x.shape
+    colk = np.arange(k)
     # forward: L y = b, leaves upward
     for groups in sw.levels:
+        acc_idx: List[np.ndarray] = []
+        acc_upd: List[np.ndarray] = []
         for g in groups:
-            xb = np.where(g.pmask, x[g.piv], 0.0)
-            y = np.linalg.solve(g.L11, xb[..., None])[..., 0]
+            xb = np.where(g.pmask[..., None], x[g.piv], 0.0)
+            y = np.linalg.solve(g.L11, xb)
             x[g.piv[g.pmask]] = y[g.pmask]
             if g.rest.shape[1]:
-                upd = np.einsum("brp,bp->br", g.L21, y)
-                np.subtract.at(x, g.rest[g.rmask], upd[g.rmask])
+                upd = np.einsum("brp,bpk->brk", g.L21, y)
+                acc_idx.append(g.rest[g.rmask])
+                acc_upd.append(upd[g.rmask])
+        if acc_idx:
+            idx = np.concatenate(acc_idx)
+            upd = np.concatenate(acc_upd)
+            flat = (idx[:, None] * k + colk).ravel()
+            x -= np.bincount(flat, weights=upd.ravel(),
+                             minlength=n * k).reshape(n, k)
     # backward: Lᵀ x = y, roots downward
     for groups in reversed(sw.levels):
         for g in groups:
-            rhs = np.where(g.pmask, x[g.piv], 0.0)
+            rhs = np.where(g.pmask[..., None], x[g.piv], 0.0)
             if g.rest.shape[1]:
-                xr = np.where(g.rmask, x[g.rest], 0.0)
-                rhs = rhs - np.einsum("brp,br->bp", g.L21, xr)
-            y = np.linalg.solve(g.L11T, rhs[..., None])[..., 0]
+                xr = np.where(g.rmask[..., None], x[g.rest], 0.0)
+                rhs = rhs - np.einsum("brp,brk->bpk", g.L21, xr)
+            y = np.linalg.solve(g.L11T, rhs)
             x[g.piv[g.pmask]] = y[g.pmask]
-    return x
 
 
-def _solve_sequential(f: MultifrontalFactor, b: np.ndarray) -> np.ndarray:
-    """Per-front scipy sweeps (the pre-level-scheduling reference path)."""
-    x = b.astype(np.float64).copy()
+def _solve_sequential(f: MultifrontalFactor, x: np.ndarray) -> None:
+    """Per-front scipy sweeps, in place on the (n, k) fp64 RHS block (the
+    pre-level-scheduling reference path)."""
     # forward: L y = b
     for fr in f.fronts:
         c0, c1 = fr.cols
@@ -550,24 +590,161 @@ def _solve_sequential(f: MultifrontalFactor, b: np.ndarray) -> np.ndarray:
         if fr.L21.shape[0]:
             rhs = rhs - fr.L21.T @ x[fr.rows[c1 - c0 :]]
         x[piv] = sla.solve_triangular(fr.L11.T, rhs, lower=False)
+
+
+# -- device-resident sweeps --------------------------------------------------
+
+@dataclasses.dataclass
+class _DeviceSweepGroup:
+    """One level-bucket's factors as device arrays for batched Pallas
+    substitution. Indices are int32 with every pad slot pointing at the
+    trash row ``n`` of the (n + 1, K) RHS block — no masks needed on
+    device: identity pad rows in L11 and zero pad rows/cols in L21 keep
+    whatever garbage the trash row holds out of every real entry."""
+
+    L11: object            # (B, P, P) f32 device, unit-diag padded
+    L21: object            # (B, R, P) f32 device
+    piv: object            # (B, P) int32 device, pads -> n
+    rest: object           # (B, R) int32 device, pads -> n
+
+
+@dataclasses.dataclass
+class _DeviceSweeps:
+    levels: List[List[_DeviceSweepGroup]]
+
+
+def _bucket_indices(sched: LevelSchedule, bucket, n: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """(B, P) pivot and (B, R) update-row index stacks for one bucket,
+    pads pointed at the trash row ``n``. Built from the schedule alone —
+    no drained host fronts needed."""
+    B, P, R = len(bucket.members), bucket.P, bucket.R
+    piv = np.full((B, P), n, dtype=np.int32)
+    rest = np.full((B, R), n, dtype=np.int32)
+    for bi, k in enumerate(bucket.members):
+        fp = sched.fronts[k]
+        piv[bi, : fp.npiv] = np.arange(fp.c0, fp.c1, dtype=np.int32)
+        rest[bi, : fp.nrest] = fp.rows[fp.npiv :]
+    return piv, rest
+
+
+def _build_device_sweeps(f: MultifrontalFactor) -> _DeviceSweeps:
+    """Stack each level-bucket's factors as device arrays.
+
+    After a ``pipelined`` factorization the factored workspace stacks are
+    still device-resident (``f._device_stacks``) and already in the padded
+    bucket layout — L11/L21 are sliced straight out of them (the identity
+    pivot pads factored to unit-diagonal rows, update-row pads to zero
+    rows, exactly the inert padding the sweeps need). Any other backend
+    uploads its host fronts once; repeated solves reuse the cached stacks.
+    """
+    import jax.numpy as jnp
+
+    sched = f.schedule
+    assert sched is not None
+    n = f.n
+    levels: List[List[_DeviceSweepGroup]] = []
+    if f._device_stacks is not None:
+        for li in range(sched.nlevels):
+            groups: List[_DeviceSweepGroup] = []
+            for bj, bucket in enumerate(sched.buckets[li]):
+                W = f._device_stacks[(li, bj)]
+                P = bucket.P
+                piv, rest = _bucket_indices(sched, bucket, n)
+                groups.append(_DeviceSweepGroup(
+                    jnp.tril(W[:, :P, :P]), W[:, P:, :P],
+                    jnp.asarray(piv), jnp.asarray(rest)))
+            levels.append(groups)
+        return _DeviceSweeps(levels)
+    if f._sweeps is None:
+        f._sweeps = _build_sweeps(f)
+    for li, host_groups in enumerate(f._sweeps.levels):
+        groups = []
+        for bj, g in enumerate(host_groups):
+            piv, rest = _bucket_indices(sched, sched.buckets[li][bj], n)
+            groups.append(_DeviceSweepGroup(
+                jnp.asarray(g.L11, jnp.float32),
+                jnp.asarray(g.L21, jnp.float32),
+                jnp.asarray(piv), jnp.asarray(rest)))
+        levels.append(groups)
+    return _DeviceSweeps(levels)
+
+
+def _device_sweep_passes(f: MultifrontalFactor, x, *,
+                         sweep_bs: Optional[int] = None,
+                         rt: Optional[int] = None):
+    """Forward + backward substitution on a device-resident (n + 1, K) f32
+    RHS block. One asynchronously dispatched jit step per level-bucket; no
+    host sync anywhere — callers decide when to pull the result."""
+    from repro.kernels import ops
+
+    if f._dev_sweeps is None:
+        f._dev_sweeps = _build_device_sweeps(f)
+    sw = f._dev_sweeps
+    for groups in sw.levels:
+        for g in groups:
+            x = ops.sweep_forward(x, g.L11, g.L21, g.piv, g.rest,
+                                  bs=sweep_bs, rt=rt)
+    for groups in reversed(sw.levels):
+        for g in groups:
+            x = ops.sweep_backward(x, g.L11, g.L21, g.piv, g.rest,
+                                   bs=sweep_bs, rt=rt)
     return x
 
 
+def _solve_device(f: MultifrontalFactor, b2: np.ndarray, *,
+                  sweep_bs: Optional[int] = None,
+                  rt: Optional[int] = None) -> np.ndarray:
+    """Device-resident sweeps for an (n, k) RHS block: upload once, one
+    async dispatch per level-bucket, one sync to fetch the solution."""
+    import jax.numpy as jnp
+
+    n, k = b2.shape
+    kt = k if rt is None else max(1, min(int(rt), k))
+    kp = -(-k // kt) * kt          # pad K so the RHS-tile grid divides it
+    xb = np.zeros((n + 1, kp), dtype=np.float32)
+    xb[:n, :k] = b2
+    x = _device_sweep_passes(f, jnp.asarray(xb), sweep_bs=sweep_bs, rt=kt)
+    return np.asarray(x[:n, :k], dtype=np.float64)
+
+
+SweepMode = Literal["auto", "level", "seq", "device"]
+
+
 def multifrontal_solve(f: MultifrontalFactor, b: np.ndarray,
-                       mode: Literal["auto", "level", "seq"] = "auto"
-                       ) -> np.ndarray:
+                       mode: SweepMode = "auto", *,
+                       sweep_bs: Optional[int] = None,
+                       rt: Optional[int] = None) -> np.ndarray:
     """Solve A x = b with the supernodal factor.
 
+    ``b`` may be a single RHS ``(n,)`` or a block ``(n, k)`` — all sweep
+    modes are natively multi-RHS and the result matches the input shape.
     ``mode="level"`` (the default when the factor carries a schedule) runs
-    the level-batched sweeps; ``"seq"`` keeps the per-front loop (reference
-    and fallback). Repeated solves reuse the stacked sweep tensors cached on
-    the factor.
+    the host level-batched sweeps; ``"seq"`` keeps the per-front loop
+    (reference and fallback); ``"device"`` runs the batched Pallas
+    substitution kernels on device-resident factor stacks (f32 — pair
+    with refinement for fp64 residuals). ``sweep_bs``/``rt`` are the
+    autotuned device-sweep knobs (tri-solve panel cap and RHS tile width);
+    both are ignored by the host modes. Repeated solves reuse the stacked
+    sweep tensors cached on the factor.
     """
-    if mode == "seq" or (mode == "auto" and f.schedule is None):
-        return _solve_sequential(f, b)
-    if f.schedule is None:
-        raise ValueError("mode='level' needs a factor with a schedule")
-    return _solve_level(f, b)
+    b = np.asarray(b)
+    single = b.ndim == 1
+    if mode == "auto":
+        mode = "seq" if f.schedule is None else "level"
+    if mode in ("level", "device") and f.schedule is None:
+        raise ValueError(f"mode={mode!r} needs a factor with a schedule")
+    if mode == "device":
+        x = _solve_device(f, b[:, None] if single else b,
+                          sweep_bs=sweep_bs, rt=rt)
+        return x[:, 0] if single else x
+    x = np.array(b, dtype=np.float64)   # the one owned fp64 copy
+    x2 = x[:, None] if single else x    # view — sweeps mutate in place
+    if mode == "seq":
+        _solve_sequential(f, x2)
+    else:
+        _solve_level(f, x2)
+    return x
 
 
 def factor_and_solve_timed(a: CSRMatrix, b: np.ndarray | None = None,
@@ -575,7 +752,10 @@ def factor_and_solve_timed(a: CSRMatrix, b: np.ndarray | None = None,
                            sym: Optional[SymbolicFactor] = None,
                            backend: Backend = "numpy",
                            pad: str = "pow2",
-                           bs: Optional[int] = None) -> dict:
+                           bs: Optional[int] = None,
+                           sweep: SweepMode = "auto",
+                           sweep_bs: Optional[int] = None,
+                           rt: Optional[int] = None) -> dict:
     """Measured factor+solve wall time — the per-(matrix, ordering) label
     signal, mirroring the paper's MUMPS timings.
 
@@ -584,12 +764,16 @@ def factor_and_solve_timed(a: CSRMatrix, b: np.ndarray | None = None,
     entirely; ``t_symbolic`` is then reported as 0. ``relax`` tunes the
     supernode amalgamation and ``backend`` picks the front-math substrate,
     so labeling can time the Pallas / batched / pipelined paths too;
-    ``pad``/``bs`` are the autotuned bucket/block policy knobs (see
-    :mod:`repro.autotune.solve_tuner`).
+    ``pad``/``bs`` are the autotuned bucket/block policy knobs and
+    ``sweep``/``sweep_bs``/``rt`` the triangular-sweep mode and its
+    device-kernel knobs (see :mod:`repro.autotune.solve_tuner`).
     """
     if b is None:
         rng = np.random.default_rng(0)
         b = rng.standard_normal(a.n)
+    # hoist the fp64 cast out of the timed region (and out of any caller's
+    # repeat loop): the sweeps get a ready-to-consume contiguous fp64 RHS
+    b = np.ascontiguousarray(b, dtype=np.float64)
     if sym is None:
         t0 = time.perf_counter()
         sym = symbolic_cholesky(a)
@@ -601,7 +785,7 @@ def factor_and_solve_timed(a: CSRMatrix, b: np.ndarray | None = None,
                               bs=bs)
     t_fac = time.perf_counter() - t0
     t0 = time.perf_counter()
-    x = multifrontal_solve(f, b)
+    x = multifrontal_solve(f, b, mode=sweep, sweep_bs=sweep_bs, rt=rt)
     t_sol = time.perf_counter() - t0
     resid = float(np.linalg.norm(a.matvec(x) - b) / max(np.linalg.norm(b), 1e-30))
     return dict(time=t_sym + t_fac + t_sol, t_symbolic=t_sym, t_factor=t_fac,

@@ -13,6 +13,18 @@ reaches the fp64 floor whenever κ(A) ≪ 1/ε₃₂. The loop is
 residual-controlled: it stops at ``tol``, at ``max_iter``, or when progress
 stalls (guards ill-conditioned systems against cycling forever).
 
+Two drivers share those stopping rules:
+
+* :func:`refine_solve` — host loop around caller-supplied ``matvec`` /
+  ``solve`` closures (any backend, any sweep mode).
+* :func:`refine_solve_device` — the device-resident loop for
+  ``sweep="device"``: x, r, and the factor stacks stay in device memory,
+  the fp64 residual matvec runs through the block-ELL SpMV kernel
+  (:mod:`repro.kernels.spmv_bell`), and the only host↔device traffic per
+  iteration is the residual-norm scalar. fp64 on device needs the x64
+  context (CPU interpret / CI); on an f64-less accelerator the residual
+  falls back to f32 and the loop simply stalls out earlier.
+
 This is what makes the fp32 ``batched``/``pallas`` factorization backends of
 :mod:`repro.sparse.multifrontal` usable as drop-in replacements for the fp64
 numpy path: ``EngineConfig.solve_dtype = "fp32_refine"``.
@@ -20,11 +32,14 @@ numpy path: ``EngineConfig.solve_dtype = "fp32_refine"``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List
+import functools
+import time
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["RefineInfo", "refine_solve", "DEFAULT_TOL"]
+__all__ = ["RefineInfo", "refine_solve", "refine_solve_device",
+           "DEFAULT_TOL"]
 
 DEFAULT_TOL = 1e-12
 _STALL_FACTOR = 0.5   # require ≥ 2× residual reduction per sweep to continue
@@ -35,10 +50,30 @@ class RefineInfo:
     iterations: int          # correction sweeps applied (0 = first solve enough)
     residuals: List[float]   # relative residual after each evaluation
     converged: bool
+    # where the solve-phase wall time went: triangular sweeps vs residual
+    # evaluation (on the device loop the residual timer includes the one
+    # scalar sync per iteration, where queued sweep work completes)
+    t_sweep: float = 0.0
+    t_residual: float = 0.0
 
     @property
     def final_residual(self) -> float:
         return self.residuals[-1] if self.residuals else float("inf")
+
+
+def _should_stop(residuals: List[float], tol: float, iters: int,
+                 max_iter: int) -> Tuple[bool, bool]:
+    """(stop, converged) under the shared stopping rules: tolerance
+    reached, iteration budget spent, or progress stalled (conditioning
+    beyond what low-precision corrections can fix)."""
+    rel = residuals[-1]
+    if rel <= tol:
+        return True, True
+    if iters >= max_iter:
+        return True, False
+    if len(residuals) >= 2 and rel > _STALL_FACTOR * residuals[-2]:
+        return True, False
+    return False, False
 
 
 def refine_solve(matvec: Callable[[np.ndarray], np.ndarray],
@@ -50,25 +85,132 @@ def refine_solve(matvec: Callable[[np.ndarray], np.ndarray],
 
     ``matvec`` must be the fp64 operator of A; ``solve`` is the (possibly
     low-precision) factorization solve applied to an fp64 right-hand side.
+    ``b`` may be ``(n,)`` or an ``(n, k)`` RHS block (both closures must
+    then accept blocks; the residual norm is Frobenius over the block).
     Returns ``(x, RefineInfo)``.
     """
+    pc = time.perf_counter
     b = np.asarray(b, dtype=np.float64)
     nb = float(np.linalg.norm(b))
     if nb == 0.0:
         return np.zeros_like(b), RefineInfo(0, [0.0], True)
+    t0 = pc()
     x = np.asarray(solve(b), dtype=np.float64)
+    t_sweep = pc() - t0
     residuals: List[float] = []
     iters = 0
+    t_res = 0.0
     while True:
+        t0 = pc()
         r = b - np.asarray(matvec(x), dtype=np.float64)
         rel = float(np.linalg.norm(r)) / nb
+        t_res += pc() - t0
         residuals.append(rel)
-        if rel <= tol:
-            return x, RefineInfo(iters, residuals, True)
-        if iters >= max_iter:
-            return x, RefineInfo(iters, residuals, False)
-        if len(residuals) >= 2 and rel > _STALL_FACTOR * residuals[-2]:
-            # stalled: conditioning beyond what fp32 corrections can fix
-            return x, RefineInfo(iters, residuals, False)
+        stop, ok = _should_stop(residuals, tol, iters, max_iter)
+        if stop:
+            return x, RefineInfo(iters, residuals, ok, t_sweep, t_res)
+        t0 = pc()
         x = x + np.asarray(solve(r), dtype=np.float64)
+        t_sweep += pc() - t0
         iters += 1
+
+
+def _jax_x64():
+    """The ``enable_x64`` context manager when this jax build has it, else
+    a no-op context (residual math then runs in f32 and the stall guard
+    ends the loop at the f32 floor)."""
+    try:
+        from jax.experimental import enable_x64
+        return enable_x64()
+    except ImportError:  # pragma: no cover - old jax
+        import contextlib
+        return contextlib.nullcontext()
+
+
+@functools.cache
+def _residual_dev_fn():
+    """jit'd device residual step: r = b − A x (block-ELL SpMV) and ‖r‖."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.spmv_bell import bell_spmv
+
+    @functools.partial(jax.jit, static_argnames=("interpret",))
+    def step(blocks, idx, x, bp, interpret):
+        r = bp - bell_spmv(blocks, idx, x, interpret=interpret)
+        return r, jnp.linalg.norm(r)
+
+    return step
+
+
+def refine_solve_device(a, f, b: np.ndarray, *,
+                        tol: float = DEFAULT_TOL, max_iter: int = 10,
+                        sweep_bs: Optional[int] = None,
+                        rt: Optional[int] = None,
+                        spmv_bs: int = 8) -> tuple[np.ndarray, RefineInfo]:
+    """Device-resident refinement for the ``sweep="device"`` solve path.
+
+    ``a`` is the (permuted) fp64 :class:`repro.sparse.csr.CSRMatrix`, ``f``
+    the schedule-carrying :class:`~repro.sparse.multifrontal.
+    MultifrontalFactor`. The solution and residual live on device for the
+    whole loop: the correction solve is the batched-Pallas sweep pass on
+    the resident factor stacks, the residual matvec is the block-ELL SpMV
+    kernel over fp64 blocks (converted from CSR once), and the only
+    per-iteration host↔device traffic is the residual-norm scalar — the
+    ``float()`` that also serves as the sync point for the level-bucket
+    dispatches queued by the sweep. Stopping rules (tol / max_iter /
+    stall) are shared with :func:`refine_solve`. ``b``: ``(n,)`` or
+    ``(n, k)``; returns ``(x fp64 host, RefineInfo)``.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import _interpret
+    from repro.kernels.spmv_bell import csr_to_bell
+    from repro.sparse.multifrontal import _device_sweep_passes
+
+    pc = time.perf_counter
+    b = np.asarray(b, dtype=np.float64)
+    single = b.ndim == 1
+    b2 = b[:, None] if single else b
+    n, k = b2.shape
+    nb = float(np.linalg.norm(b2))
+    if nb == 0.0:
+        return np.zeros_like(b), RefineInfo(0, [0.0], True)
+    blocks, idx, npad = csr_to_bell(a.indptr, a.indices, a.data, n,
+                                    bs=spmv_bs)
+    interp = _interpret()
+    residual_step = _residual_dev_fn()
+
+    def sweep(r32):
+        """f32 sweep pass on a device (n, k) block → device (n, k) f32."""
+        x = jnp.zeros((n + 1, k), jnp.float32).at[:n].set(r32)
+        return _device_sweep_passes(f, x, sweep_bs=sweep_bs, rt=rt)[:n]
+
+    with _jax_x64():
+        blocks_d = jnp.asarray(blocks)                   # fp64 ELL blocks
+        idx_d = jnp.asarray(idx)
+        bp = jnp.zeros((npad, k)).at[:n].set(jnp.asarray(b2))
+        t0 = pc()
+        dx = sweep(jnp.asarray(b2.astype(np.float32)))
+        x = jnp.zeros((npad, k)).at[:n].set(dx.astype(bp.dtype))
+        t_sweep = pc() - t0
+        residuals: List[float] = []
+        iters = 0
+        t_res = 0.0
+        while True:
+            t0 = pc()
+            r, nrm = residual_step(blocks_d, idx_d, x, bp, interp)
+            rel = float(nrm) / nb       # the one per-iteration scalar sync
+            t_res += pc() - t0
+            residuals.append(rel)
+            stop, ok = _should_stop(residuals, tol, iters, max_iter)
+            if stop:
+                break
+            t0 = pc()
+            dx = sweep(r[:n].astype(jnp.float32))
+            x = x.at[:n].add(dx.astype(bp.dtype))
+            t_sweep += pc() - t0
+            iters += 1
+        out = np.asarray(x[:n], dtype=np.float64)
+    return (out[:, 0] if single else out,
+            RefineInfo(iters, residuals, ok, t_sweep, t_res))

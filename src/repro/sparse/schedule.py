@@ -120,6 +120,13 @@ class LevelSchedule:
     def nlevels(self) -> int:
         return len(self.levels)
 
+    def sweep_flops(self, k: int = 1) -> int:
+        """FLOPs of one forward+backward triangular sweep over ``k`` RHS
+        columns: per front, two npiv² triangular solves plus the L21 scatter
+        and gather GEMVs (2·npiv·nrest each), per column."""
+        return k * int(sum(2 * fp.npiv * fp.npiv + 4 * fp.npiv * fp.nrest
+                           for fp in self.fronts))
+
     def stats(self) -> dict:
         widths = [len(lv) for lv in self.levels]
         # occupancy per level: true front cells / padded workspace cells of
